@@ -1,0 +1,70 @@
+"""§2.1 reproduction: deletion-compliance I/O. Clustered (per-user) deletes
+touch one row group's pages; Bullion rewrites only those pages + footer
+in place, vs the legacy full-file rewrite. Also reports the Merkle
+incremental-vs-monolithic checksum work."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import Compliance, delete_rows, verify_deleted
+from repro.data.synthetic import write_ads_table
+
+
+def run(report):
+    with tempfile.TemporaryDirectory() as td:
+        base = os.path.join(td, "ads.bln")
+        # 256 row groups: user-clustered deletes touch ~1 group per user (the
+        # paper's production regime — delete requests hit a small clustered
+        # slice of each file while the file itself is large)
+        write_ads_table(base, n_rows=65536, n_sparse=6, n_dense=10,
+                        seq_len=24, rows_per_group=256)
+        size = os.path.getsize(base)
+
+        for frac_label, n_users in (("one_user", 1), ("2pct", 16), ("8pct", 64)):
+            path = os.path.join(td, f"del_{frac_label}.bln")
+            shutil.copy(base, path)
+            # users are sorted -> each user's rows are contiguous (the
+            # production layout the paper assumes)
+            from repro.core import BullionReader
+            with BullionReader(path) as r:
+                uid = r.read_column("user_id")
+            # pick users from the middle of the id range: FOR/dict-masked
+            # slots decode to page-min/0 placeholders, which would otherwise
+            # collide with the smallest ids and read as phantom occurrences
+            all_users = np.unique(uid)
+            users = all_users[len(all_users) // 2: len(all_users) // 2 + n_users]
+            rows = np.flatnonzero(np.isin(uid, users))
+            stats = delete_rows(path, rows, Compliance.LEVEL2)
+            audit = verify_deleted(path, "user_id", users)
+            assert audit["visible_rows"] == 0
+            reduction = stats.bytes_full_rewrite / max(stats.bytes_rewritten, 1)
+            data_red = stats.bytes_full_rewrite / max(stats.bytes_rewritten_data, 1)
+            report(f"deletion/L2_data_io_reduction/{frac_label}", data_red,
+                   f"{data_red:.1f}x data-only (the paper's comparison); "
+                   f"{reduction:.1f}x incl. footer metadata rewrite "
+                   f"({stats.rows_deleted} rows, "
+                   f"{stats.pages_masked_in_place} in-place, "
+                   f"{stats.pages_relocated} relocated, "
+                   f"raw_left={audit['raw_occurrences']})")
+            hash_ratio = stats.hash_ops_monolithic / max(stats.hash_ops_incremental, 1)
+            report(f"deletion/merkle_hash_reduction/{frac_label}", hash_ratio,
+                   f"{hash_ratio:.1f}x fewer hash ops")
+
+        # L1 (deletion-vector only) as the cheap-but-noncompliant reference
+        path = os.path.join(td, "del_l1.bln")
+        shutil.copy(base, path)
+        from repro.core import BullionReader
+        with BullionReader(path) as r:
+            uid = r.read_column("user_id")
+        mid = np.unique(uid)[len(np.unique(uid)) // 2:][:5]
+        rows = np.flatnonzero(np.isin(uid, mid))
+        stats = delete_rows(path, rows, Compliance.LEVEL1)
+        audit = verify_deleted(path, "user_id", mid)
+        report("deletion/L1_raw_occurrences", audit["raw_occurrences"],
+               f"visible={audit['visible_rows']} raw={audit['raw_occurrences']} "
+               "(L1 hides but does NOT erase)")

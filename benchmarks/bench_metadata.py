@@ -1,0 +1,56 @@
+"""Fig. 5 reproduction: metadata parse time for single-column projection vs
+table width. Bullion stays flat (binary map scan over footer views); the
+Parquet/thrift-like baseline grows linearly (full footer deserialization)."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BullionReader, BullionWriter, ColumnSpec
+
+from . import parquet_like
+
+
+def _bullion_file(path: str, n_cols: int) -> None:
+    rng = np.random.default_rng(0)
+    schema = [ColumnSpec(f"feature_{c}", "int64") for c in range(n_cols)]
+    table = {f"feature_{c}": rng.integers(0, 100, 64).astype(np.int64)
+             for c in range(n_cols)}
+    w = BullionWriter(path, schema, rows_per_group=64)
+    w.write_table(table)
+    w.close()
+
+
+def run(report):
+    widths = (100, 1000, 5000, 10000, 20000)
+    with tempfile.TemporaryDirectory() as td:
+        for n_cols in widths:
+            # --- parquet-like: full deserialization then lookup
+            footer = parquet_like.build_footer(n_cols)
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                parquet_like.lookup_column(footer, f"feature_{n_cols // 2}")
+            t_pq = (time.perf_counter() - t0) / reps * 1e3
+
+            # --- bullion: footer pread + binary map scan
+            path = os.path.join(td, f"w{n_cols}.bln")
+            _bullion_file(path, n_cols)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = BullionReader(path)
+                fv = r.footer
+                ci = fv.column_index(f"feature_{n_cols // 2}")
+                s, e = fv.chunk_pages(0, ci)
+                fv.page_extent(s)
+                r.close()
+            t_bln = (time.perf_counter() - t0) / reps * 1e3
+
+            report(f"metadata_parse/parquet_like/{n_cols}cols", t_pq * 1e3,
+                   f"{t_pq:.2f}ms")
+            report(f"metadata_parse/bullion/{n_cols}cols", t_bln * 1e3,
+                   f"{t_bln:.2f}ms speedup={t_pq / max(t_bln, 1e-9):.0f}x")

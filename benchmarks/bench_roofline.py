@@ -1,0 +1,70 @@
+"""Roofline summary rows derived from the multi-pod dry-run artifacts
+(deliverable g). Reads artifacts/dryrun/*.json — run
+`python -m repro.launch.dryrun --all --both-meshes` first (already done and
+committed under artifacts/)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(report):
+    for mesh in ("16x16", "2x16x16"):
+        ok = skip = err = 0
+        worst = (None, 1.0)
+        best = (None, 0.0)
+        dominant = {"compute": 0, "memory": 0, "collective": 0}
+        for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}.json"))):
+            if os.path.basename(path).count("__") != 2:
+                continue
+            with open(path) as f:
+                r = json.load(f)
+            if r["status"] == "ok":
+                ok += 1
+                t = r["roofline"]
+                dominant[t["dominant"]] += 1
+                frac = t["roofline_frac"]
+                cell = f'{r["arch"]}/{r["shape"]}'
+                if r["shape"] == "train_4k":
+                    if frac < worst[1]:
+                        worst = (cell, frac)
+                    if frac > best[1]:
+                        best = (cell, frac)
+            elif r["status"] == "skipped":
+                skip += 1
+            else:
+                err += 1
+        report(f"dryrun/{mesh}/cells_compiled", ok,
+               f"{ok} ok / {skip} principled skips / {err} errors")
+        report(f"dryrun/{mesh}/dominant_bottlenecks", dominant["collective"],
+               f"collective={dominant['collective']} memory={dominant['memory']} "
+               f"compute={dominant['compute']}")
+        if worst[0]:
+            report(f"dryrun/{mesh}/train_frac_range", best[1],
+                   f"best {best[0]}={best[1]:.3f}, worst {worst[0]}={worst[1]:.3f}")
+
+    # hillclimb before/after (tagged artifacts)
+    pairs = [
+        ("rwkv6-7b train_4k", "rwkv6_7b__train_4k__16x16.json",
+         "rwkv6-7b__train_4k__16x16__h5_nosp.json"),
+        ("chameleon-34b train_4k", "chameleon_34b__train_4k__16x16.json",
+         "chameleon-34b__train_4k__16x16__h2_mb2.json"),
+        ("llama3.2-1b train_4k", "llama3_2_1b__train_4k__16x16.json",
+         "llama3_2-1b__train_4k__16x16__h3_mb1.json"),
+    ]
+    for label, base_f, opt_f in pairs:
+        try:
+            base = json.load(open(os.path.join(ARTIFACTS, base_f)))
+            opt = json.load(open(os.path.join(ARTIFACTS, opt_f)))
+        except FileNotFoundError:
+            continue
+        b, o = base["roofline"], opt["roofline"]
+        report(f"perf/{label.split()[0]}/frac_gain",
+               o["roofline_frac"] / max(b["roofline_frac"], 1e-9),
+               f"frac {b['roofline_frac']:.3f} -> {o['roofline_frac']:.3f}; "
+               f"bound {b['bound_s']:.3g}s -> {o['bound_s']:.3g}s "
+               f"({b['dominant']} -> {o['dominant']})")

@@ -1,0 +1,87 @@
+"""A Parquet/Thrift-style metadata baseline (for Fig. 5's comparison).
+
+Parquet footers hold one ColumnMetaData struct per column, and readers must
+deserialize ALL of them before locating any column (thrift compact protocol:
+varint-tagged fields decoded sequentially). We reproduce that access pattern:
+a varint-encoded struct stream, decoded column-by-column in Python, the same
+O(n_cols) shape Zeng et al. measured. Bullion's footer (FooterView) answers
+the same lookup with two preads + a binary search over numpy views.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+
+def _write_varint(buf: bytearray, v: int) -> None:
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            buf.append(b | 0x80)
+        else:
+            buf.append(b)
+            return
+
+
+def _read_varint(mv: bytes, off: int) -> tuple[int, int]:
+    out = shift = 0
+    while True:
+        b = mv[off]
+        off += 1
+        out |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return out, off
+        shift += 7
+
+
+def build_footer(n_cols: int, seed: int = 0) -> bytes:
+    """Thrift-ish footer: per column {id, offset, size, n_values, encoding,
+    min, max, name} with varint framing."""
+    rng = np.random.default_rng(seed)
+    buf = bytearray()
+    _write_varint(buf, n_cols)
+    off = 0
+    for c in range(n_cols):
+        size = int(rng.integers(1 << 10, 1 << 20))
+        name = f"feature_{c}".encode()
+        for v in (c, off, size, int(rng.integers(1, 1 << 20)),
+                  int(rng.integers(0, 8))):
+            _write_varint(buf, v)
+        buf += struct.pack("<qq", int(rng.integers(-1 << 40, 1 << 40)),
+                           int(rng.integers(-1 << 40, 1 << 40)))
+        _write_varint(buf, len(name))
+        buf += name
+        off += size
+    return bytes(buf)
+
+
+def parse_footer(footer: bytes) -> list[dict]:
+    """Full deserialization — what a Parquet reader must do before projecting."""
+    n, off = _read_varint(footer, 0)
+    cols = []
+    for _ in range(n):
+        cid, off = _read_varint(footer, off)
+        data_off, off = _read_varint(footer, off)
+        size, off = _read_varint(footer, off)
+        nvals, off = _read_varint(footer, off)
+        enc, off = _read_varint(footer, off)
+        mn, mx = struct.unpack_from("<qq", footer, off)
+        off += 16
+        nlen, off = _read_varint(footer, off)
+        name = footer[off:off + nlen].decode()
+        off += nlen
+        cols.append({"id": cid, "offset": data_off, "size": size,
+                     "n_values": nvals, "encoding": enc, "min": mn, "max": mx,
+                     "name": name})
+    return cols
+
+
+def lookup_column(footer: bytes, name: str) -> dict:
+    """Parquet-style projection: parse everything, then find the column."""
+    for col in parse_footer(footer):
+        if col["name"] == name:
+            return col
+    raise KeyError(name)

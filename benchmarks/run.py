@@ -1,0 +1,45 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_cascade, bench_deletion, bench_metadata,
+                   bench_multimodal, bench_projection, bench_quantization,
+                   bench_roofline, bench_sparse_delta)
+
+    rows: list[tuple[str, float, str]] = []
+
+    def report(name: str, value: float, derived: str = "") -> None:
+        rows.append((name, float(value), derived))
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("metadata  (Fig. 5)", bench_metadata),
+        ("deletion  (§2.1)", bench_deletion),
+        ("sparse_delta (§2.2, Figs. 3-4)", bench_sparse_delta),
+        ("quantization (§2.4, Fig. 6)", bench_quantization),
+        ("multimodal (§2.5, Fig. 7)", bench_multimodal),
+        ("cascade   (§2.6, Table 2)", bench_cascade),
+        ("projection (§2.3, Table 1)", bench_projection),
+        ("roofline  (dry-run artifacts)", bench_roofline),
+    ]
+    failures = 0
+    for label, mod in suites:
+        t0 = time.time()
+        try:
+            mod.run(report)
+            print(f"# {label}: done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {label}: FAILED\n{traceback.format_exc()}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Bullion read path.
+
+Feature projection (paper §2.3): footer pread -> binary map scan for column
+indices -> byte ranges from the offsets arrays -> targeted preads.  Adjacent
+page ranges are coalesced into single I/O operations (the Alpha-style
+optimization the paper cites) because ML projections read many columns of the
+same row group.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from . import pages
+from .encodings.base import code_dtype
+from .footer import ColKind, FooterView, PageType, Sec, read_footer
+from .quantization import QuantMode, QuantSpec, dequantize
+
+COALESCE_GAP = 64 * 1024  # merge preads when the hole is smaller than this
+
+
+@dataclass
+class IOStats:
+    preads: int = 0
+    bytes_read: int = 0
+    footer_bytes: int = 0
+    metadata_seconds: float = 0.0
+
+
+class BullionReader:
+    def __init__(self, path: str):
+        self.path = path
+        t0 = time.perf_counter()
+        self.footer, self.footer_offset = read_footer(path)
+        self.stats = IOStats(preads=2, footer_bytes=len(self.footer._buf),
+                             bytes_read=len(self.footer._buf))
+        self.stats.metadata_seconds = time.perf_counter() - t0
+        self._f = open(path, "rb")
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- metadata ---------------------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self.footer.num_rows
+
+    @property
+    def column_names(self) -> list[str]:
+        return self.footer.column_names()
+
+    def quant_spec(self, col: int) -> QuantSpec:
+        from .quantization import QUANT_DTYPE
+        recs = self.footer.arr(Sec.QUANT_META, QUANT_DTYPE)
+        return QuantSpec.from_record(recs[col])
+
+    # -- I/O ----------------------------------------------------------------------
+    def _pread(self, offset: int, size: int) -> bytes:
+        self._f.seek(offset)
+        self.stats.preads += 1
+        self.stats.bytes_read += size
+        return self._f.read(size)
+
+    def _read_pages(self, page_ids: Sequence[int]) -> dict[int, bytes]:
+        """Coalesced ranged reads for a set of pages."""
+        fv = self.footer
+        extents = sorted((fv.page_extent(p), p) for p in page_ids)
+        out: dict[int, bytes] = {}
+        i = 0
+        while i < len(extents):
+            (off, size), _ = extents[i]
+            j = i + 1
+            end = off + size
+            while j < len(extents):
+                (o2, s2), _ = extents[j]
+                if o2 - end > COALESCE_GAP:
+                    break
+                end = max(end, o2 + s2)
+                j += 1
+            buf = self._pread(off, end - off)
+            for k in range(i, j):
+                (o, s), p = extents[k]
+                out[p] = buf[o - off: o - off + s]
+            i = j
+        return out
+
+    # -- projection ----------------------------------------------------------------
+    def project(self, names: Sequence[str], groups: Optional[Sequence[int]] = None,
+                drop_deleted: bool = True, dequant: bool = True) -> Iterator[dict]:
+        """Yield one dict per row group with decoded columns."""
+        fv = self.footer
+        cols = [fv.column_index(n) for n in names]
+        kinds = fv.arr(Sec.COL_KIND, np.uint8)
+        flags = fv.arr(Sec.PAGE_FLAGS, np.uint8)
+        page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
+        for g in (groups if groups is not None else range(fv.n_groups)):
+            wanted: list[int] = []
+            for c in cols:
+                s, e = fv.chunk_pages(g, c)
+                wanted.extend(range(s, e))
+            raw = self._read_pages(wanted)
+            out: dict = {}
+            for name, c in zip(names, cols):
+                s, e = fv.chunk_pages(g, c)
+                parts = []
+                for p in range(s, e):
+                    decoded = pages.decode_page(int(flags[p]) & 0x7F, raw[p])
+                    if drop_deleted:
+                        decoded = pages.apply_dv(decoded, fv.deletion_vector(p),
+                                                 int(page_rows[p]))
+                    parts.append(decoded)
+                val = parts[0] if len(parts) == 1 else _concat(parts)
+                if dequant and kinds[c] == int(ColKind.SCALAR):
+                    spec = self.quant_spec(c)
+                    if spec.mode != QuantMode.NONE:
+                        val = dequantize(np.asarray(val), spec)
+                out[name] = val
+            yield out
+
+    def read_column(self, name: str, **kw) -> np.ndarray | list:
+        parts = [t[name] for t in self.project([name], **kw)]
+        if isinstance(parts[0], np.ndarray):
+            return np.concatenate(parts)
+        return [r for p in parts for r in p]
+
+    # -- helpers for deletion / benchmarks ----------------------------------------
+    def locate_rows(self, global_rows: np.ndarray) -> list[tuple[int, np.ndarray]]:
+        """Map global row ids -> [(group, local_rows)]."""
+        rpg = self.footer.arr(Sec.ROWS_PER_GROUP, np.uint32).astype(np.int64)
+        bounds = np.concatenate([[0], np.cumsum(rpg)])
+        global_rows = np.asarray(global_rows, np.int64)
+        g = np.searchsorted(bounds, global_rows, side="right") - 1
+        out = []
+        for grp in np.unique(g):
+            out.append((int(grp), global_rows[g == grp] - bounds[grp]))
+        return out
+
+    def find_rows(self, column: str, values) -> np.ndarray:
+        """Predicate helper: global row ids where column ∈ values."""
+        data = self.read_column(column, drop_deleted=False, dequant=False)
+        mask = np.isin(np.asarray(data), np.asarray(values))
+        return np.flatnonzero(mask)
+
+
+def _concat(parts):
+    if isinstance(parts[0], np.ndarray):
+        return np.concatenate(parts)
+    return [r for p in parts for r in p]

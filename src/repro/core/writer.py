@@ -1,0 +1,250 @@
+"""Bullion write path.
+
+Native write-time data organization (paper §2.5): row-wise sorting (e.g.
+quality-score descending for multimodal training data) and column-wise layout
+reordering (hot features adjacent for coalesced projection reads) are
+first-class, UDF-driven hooks — not a query-engine afterthought.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from . import pages
+from .encodings import EncodeContext
+from .encodings.base import dtype_code
+from .footer import ColKind, FooterBuilder, MAGIC, PageType, Sec, name_hash
+from .merkle import MerkleTree, page_hash
+from .quantization import QUANT_DTYPE, QuantMode, QuantSpec, quantize, storage_dtype
+
+
+@dataclass
+class ColumnSpec:
+    name: str
+    dtype: str                      # "int64", "float32", "list<int64>", "string", "media_ref"
+    quant: QuantSpec = field(default_factory=QuantSpec)
+    sparse_delta: bool = False      # §2.2 hint for list<int64> columns
+
+    @property
+    def kind(self) -> ColKind:
+        if self.dtype.startswith("list<"):
+            return ColKind.LIST
+        if self.dtype == "string":
+            return ColKind.STRING
+        if self.dtype == "media_ref":
+            return ColKind.MEDIA_REF
+        return ColKind.SCALAR
+
+    @property
+    def value_dtype(self) -> np.dtype:
+        if self.kind == ColKind.LIST:
+            return np.dtype(self.dtype[5:-1])
+        if self.kind in (ColKind.STRING,):
+            return np.dtype(np.uint8)
+        if self.kind == ColKind.MEDIA_REF:
+            return np.dtype(np.uint64)
+        return np.dtype(self.dtype)
+
+
+SortUDF = Callable[[dict], np.ndarray]         # table -> row permutation
+ColumnOrderUDF = Callable[[list[str]], list[str]]  # names -> layout order
+
+
+def quality_sort(column: str, descending: bool = True) -> SortUDF:
+    """The paper's quality-aware presorting (§2.5)."""
+
+    def udf(table: dict) -> np.ndarray:
+        key = np.asarray(table[column])
+        order = np.argsort(-key if descending else key, kind="stable")
+        return order
+
+    return udf
+
+
+class BullionWriter:
+    def __init__(self, path: str, schema: Sequence[ColumnSpec],
+                 rows_per_group: int = 65536,
+                 compliance: int = 2,
+                 sort_udf: Optional[SortUDF] = None,
+                 column_order_udf: Optional[ColumnOrderUDF] = None,
+                 encode_ctx: Optional[EncodeContext] = None,
+                 props: Optional[dict[str, str]] = None):
+        self.path = path
+        self.schema = list(schema)
+        self.by_name = {s.name: s for s in self.schema}
+        self.rows_per_group = rows_per_group
+        self.compliance = compliance
+        self.sort_udf = sort_udf
+        self.column_order_udf = column_order_udf
+        self.ctx = encode_ctx or EncodeContext()
+        if compliance >= 2 and encode_ctx is None:
+            # §2.1: at the strictest compliance level, prefer encodings with a
+            # native in-place masking rule (bit-packed, varint, RLE, dict,
+            # FOR) for scalar pages so deletes stay in-place. Children of
+            # these encodings are unrestricted (masking happens at the top).
+            self.ctx = EncodeContext(candidates=(
+                "constant", "rle", "dictionary", "for", "fixed_bit_width",
+                "varint", "mainly_constant", "trivial"))
+        self.props = props or {}
+        self._buffers: dict[str, list] = {s.name: [] for s in self.schema}
+        self._n_rows = 0
+
+    # -- buffering -------------------------------------------------------------
+    def write_table(self, table: dict) -> None:
+        sizes = set()
+        for spec in self.schema:
+            data = table[spec.name]
+            if spec.kind == ColKind.SCALAR or spec.kind == ColKind.MEDIA_REF:
+                data = np.asarray(data)
+                sizes.add(len(data))
+                self._buffers[spec.name].append(data)
+            else:
+                sizes.add(len(data))
+                self._buffers[spec.name].extend(data)
+        if len(sizes) != 1:
+            raise ValueError(f"ragged table: row counts {sizes}")
+        self._n_rows += sizes.pop()
+
+    def _collect(self, name: str):
+        spec = self.by_name[name]
+        if spec.kind in (ColKind.SCALAR, ColKind.MEDIA_REF):
+            return np.concatenate(self._buffers[name]) if self._buffers[name] \
+                else np.zeros(0, spec.value_dtype)
+        return self._buffers[name]
+
+    # -- finalize ----------------------------------------------------------------
+    def close(self) -> dict:
+        table = {s.name: self._collect(s.name) for s in self.schema}
+
+        # §2.5 write-path row reordering (quality sort etc.)
+        if self.sort_udf is not None and self._n_rows:
+            perm = self.sort_udf(table)
+            for s in self.schema:
+                data = table[s.name]
+                table[s.name] = data[perm] if isinstance(data, np.ndarray) \
+                    else [data[i] for i in perm]
+
+        # §2.5 column layout reordering (hot columns adjacent)
+        layout = [s.name for s in self.schema]
+        if self.column_order_udf is not None:
+            layout = self.column_order_udf(layout)
+            assert sorted(layout) == sorted(s.name for s in self.schema)
+
+        n_rows = self._n_rows
+        n_cols = len(self.schema)
+        n_groups = max(1, -(-n_rows // self.rows_per_group))
+
+        page_offset, page_size, page_rows, page_cksum, page_flags = [], [], [], [], []
+        rows_per_group_arr = []
+
+        # schema order is the *logical* order; pages are laid out in `layout`
+        # order inside each group. chunk_page_start is indexed logically, so
+        # we collect per-(group, logical col) page ranges after writing.
+        chunk_ranges: dict[tuple[int, int], tuple[int, int]] = {}
+        logical_idx = {s.name: i for i, s in enumerate(self.schema)}
+
+        with open(self.path, "wb") as f:
+            for g in range(n_groups):
+                lo = g * self.rows_per_group
+                hi = min(lo + self.rows_per_group, n_rows)
+                rows_per_group_arr.append(hi - lo)
+                for name in layout:
+                    spec = self.by_name[name]
+                    data = table[name]
+                    chunk = data[lo:hi]
+                    blob, ptype = self._build_page(spec, chunk)
+                    start_page = len(page_offset)
+                    page_offset.append(f.tell())
+                    page_size.append(len(blob))
+                    page_rows.append(hi - lo)
+                    page_cksum.append(page_hash(blob))
+                    page_flags.append(int(ptype))
+                    f.write(blob)
+                    chunk_ranges[(g, logical_idx[name])] = (start_page, len(page_offset))
+
+            # page index per logical (group, col) chunk; with §2.5 layout
+            # reordering a group's pages aren't in logical order.
+            starts = np.zeros(n_groups * n_cols, np.uint64)
+            for (g, c), (s, e) in chunk_ranges.items():
+                starts[g * n_cols + c] = s
+
+            n_pages = len(page_offset)
+            cksums = np.asarray(page_cksum, np.uint64)
+            # merkle over physical page order, grouped by row group
+            group_page_start = np.arange(0, n_pages + 1, n_cols, dtype=np.uint64)
+            tree = MerkleTree(cksums, group_page_start, n_groups, 1)
+
+            fb = FooterBuilder()
+            meta = np.zeros(8, np.uint64)
+            meta[0], meta[1], meta[2], meta[3] = n_rows, n_cols, n_groups, n_pages
+            meta[4] = self.rows_per_group
+            meta[5] = self.compliance
+            meta[6] = tree.root
+            fb.put(Sec.META, meta)
+
+            names = [s.name for s in self.schema]
+            name_bytes = b"".join(n.encode() for n in names)
+            offs = np.zeros(n_cols + 1, np.uint32)
+            np.cumsum([len(n.encode()) for n in names], out=offs[1:])
+            fb.put(Sec.NAMES_DATA, name_bytes)
+            fb.put(Sec.NAMES_OFFSETS, offs)
+            hashes = np.asarray([name_hash(n) for n in names], np.uint64)
+            order = np.argsort(hashes, kind="stable").astype(np.uint32)
+            fb.put(Sec.NAME_HASH_SORTED, hashes[order])
+            fb.put(Sec.NAME_HASH_ORDER, order)
+
+            storage_codes, logical_codes, kinds = [], [], []
+            quant = np.zeros(n_cols, QUANT_DTYPE)
+            for i, s in enumerate(self.schema):
+                logical_codes.append(dtype_code(s.value_dtype))
+                sd = storage_dtype(s.quant.mode)
+                storage_codes.append(dtype_code(sd or s.value_dtype))
+                kinds.append(int(s.kind))
+                quant[i] = s.quant.to_record()
+            fb.put(Sec.COL_DTYPE, np.asarray(storage_codes, np.uint8))
+            fb.put(Sec.COL_LOGICAL, np.asarray(logical_codes, np.uint8))
+            fb.put(Sec.COL_KIND, np.asarray(kinds, np.uint8))
+            fb.put(Sec.QUANT_META, quant)
+
+            fb.put(Sec.ROWS_PER_GROUP, np.asarray(rows_per_group_arr, np.uint32))
+            fb.put(Sec.CHUNK_PAGE_START, starts)
+            fb.put(Sec.PAGE_OFFSET, np.asarray(page_offset, np.uint64))
+            fb.put(Sec.PAGE_SIZE, np.asarray(page_size, np.uint64))
+            fb.put(Sec.PAGE_ROWS, np.asarray(page_rows, np.uint32))
+            fb.put(Sec.PAGE_CHECKSUM, cksums)
+            fb.put(Sec.PAGE_FLAGS, np.asarray(page_flags, np.uint8))
+            fb.put(Sec.DV_OFFSET, np.full(n_pages, 0xFFFFFFFFFFFFFFFF, np.uint64))
+            fb.put(Sec.DV_SIZE, np.zeros(n_pages, np.uint32))
+            fb.put(Sec.DV_DATA, b"")
+            fb.put(Sec.GROUP_CHECKSUM, tree.groups)
+            if self.props:
+                fb.put(Sec.PROPS, b"\x00".join(
+                    k.encode() + b"\x00" + v.encode() for k, v in self.props.items()) + b"\x00")
+
+            footer = fb.build()
+            f.write(footer)
+            f.write(struct.pack("<Q", len(footer)) + MAGIC)
+
+        return {"rows": n_rows, "groups": n_groups, "pages": n_pages,
+                "file_checksum": tree.root}
+
+    # -- page building -----------------------------------------------------------
+    def _build_page(self, spec: ColumnSpec, chunk) -> tuple[bytes, PageType]:
+        if spec.kind == ColKind.SCALAR:
+            arr = np.asarray(chunk)
+            if spec.quant.mode != QuantMode.NONE:
+                arr = quantize(arr, spec.quant)
+            return pages.build_scalar_page(arr, self.ctx), PageType.SCALAR
+        if spec.kind == ColKind.MEDIA_REF:
+            return pages.build_scalar_page(np.asarray(chunk, np.uint64), self.ctx), \
+                PageType.MEDIA_REF
+        if spec.kind == ColKind.LIST:
+            return pages.build_list_page(list(chunk), self.ctx,
+                                         use_sparse_delta=spec.sparse_delta)
+        if spec.kind == ColKind.STRING:
+            return pages.build_string_page(list(chunk), self.ctx), PageType.STRING
+        raise ValueError(spec.kind)

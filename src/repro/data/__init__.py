@@ -1,0 +1,4 @@
+from .loader import BullionLoader
+from .synthetic import write_lm_corpus, write_ads_table
+
+__all__ = ["BullionLoader", "write_lm_corpus", "write_ads_table"]

@@ -1,0 +1,3 @@
+from .sharding import Dist, make_dist, make_rules
+
+__all__ = ["Dist", "make_dist", "make_rules"]

@@ -1,0 +1,82 @@
+"""Distribution context: mesh + logical-axis rules + shape-aware helpers.
+
+Parallelism map (production mesh (pod=2,) data=16, model=16):
+  DP    — batch over ('pod', 'data')
+  FSDP  — parameter/optimizer 'embed' dim over 'data' (ZeRO-3; GSPMD inserts
+          per-layer all-gathers)
+  TP    — 'heads' / 'ff' / 'vocab' over 'model' (Megatron)
+  EP    — 'experts' over 'model' when divisible (else expert-TP over d_ff)
+  SP    — long-context KV cache 'kv_seq' over 'data' when batch is
+          unshardable (e.g. long_500k with global_batch=1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.base import ShardingRules
+
+
+def make_rules(mesh: Optional[Mesh], *, seq_sharded: bool = False,
+               fsdp: bool = True, train_seq_sharded: bool = False) -> ShardingRules:
+    """Build rules restricted to the axes this mesh actually has.
+
+    ``train_seq_sharded`` enables Megatron-style sequence parallelism: the
+    residual stream is sharded over 'model' between blocks, so per-layer
+    activation checkpoints shrink by the TP degree (XLA materializes the
+    all-gather before attention / reduce-scatter after, exactly Megatron-SP's
+    collective pattern)."""
+    if mesh is None:
+        return ShardingRules(embed=None, heads=None, kv_heads=None, ff=None,
+                             vocab=None, experts=None, lru=None, batch=None,
+                             seq=None, kv_seq=None)
+    names = set(mesh.axis_names)
+
+    def ax(a):
+        return a if a in names else None
+
+    batch = tuple(a for a in ("pod", "data") if a in names) or None
+    return ShardingRules(
+        embed=ax("data") if fsdp else None,
+        heads=ax("model"), kv_heads=ax("model"), ff=ax("model"),
+        vocab=ax("model"), experts=ax("model"), lru=ax("model"),
+        batch=batch,
+        seq=ax("model") if train_seq_sharded else None,
+        kv_seq=ax("data") if seq_sharded else None,
+    )
+
+
+@dataclasses.dataclass
+class Dist:
+    mesh: Optional[Mesh]
+    rules: ShardingRules
+
+    def batch_axes_for(self, b: int):
+        """Largest prefix of the batch axes that divides b."""
+        if self.mesh is None or self.rules.batch is None:
+            return None
+        axes = self.rules.batch if isinstance(self.rules.batch, tuple) \
+            else (self.rules.batch,)
+        chosen: list[str] = []
+        prod = 1
+        for a in axes:
+            size = self.mesh.shape[a]
+            if b % (prod * size) == 0:
+                chosen.append(a)
+                prod *= size
+        if not chosen:
+            return None
+        return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+    def sharding(self, spec: PartitionSpec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+def make_dist(mesh: Optional[Mesh], **rule_kw) -> Dist:
+    return Dist(mesh=mesh, rules=make_rules(mesh, **rule_kw))

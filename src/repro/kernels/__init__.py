@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for Bullion's compute hot-spots.
+
+  bitunpack       — fixed-bit-width integer unpack (C6 FixedBitWidth/FOR
+                    decode; the paper's SIMDFastBP128 analogue on the VPU)
+  dequant         — fused per-feature dequantize + cast (C4 read path)
+  flash_attention — blocked online-softmax attention (beyond-paper training
+                    perf; the §Perf answer to vanilla attention's HBM traffic)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on CPU), ref.py (pure-jnp oracle). The TPU container
+is CPU-only, so correctness is validated in interpret mode.
+"""

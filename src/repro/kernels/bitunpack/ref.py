@@ -1,0 +1,36 @@
+"""Pure-numpy/jnp oracle for the BP32 bit-planar unpack.
+
+Layout ("BP32", the TPU-native adaptation of Bullion's FixedBitWidth): values
+are grouped in 32s; plane word j of a group holds bit j of all 32 values
+(bit i of word j == bit j of value i). A width-w column stores w uint32 words
+per 32 values. This turns scalar-SIMD bit twiddling (the paper's CPU decode)
+into lane-parallel VPU shifts — value i's bits live at lane position i across
+the w plane words.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_bp32_ref(values: np.ndarray, width: int) -> np.ndarray:
+    """values: uint32[N] (N % 32 == 0, values < 2**width) -> uint32[N//32, w]."""
+    assert values.ndim == 1 and len(values) % 32 == 0
+    v = values.astype(np.uint32).reshape(-1, 32)
+    planes = np.zeros((v.shape[0], width), np.uint32)
+    for j in range(width):
+        bits = (v >> np.uint32(j)) & np.uint32(1)          # [G, 32]
+        planes[:, j] = (bits << np.arange(32, dtype=np.uint32)).sum(
+            axis=1, dtype=np.uint32)
+    return planes
+
+
+def bitunpack_ref(planes: np.ndarray, width: int) -> np.ndarray:
+    """planes: uint32[G, w] -> uint32[G*32]."""
+    G = planes.shape[0]
+    out = np.zeros((G, 32), np.uint32)
+    lanes = np.arange(32, dtype=np.uint32)
+    for j in range(width):
+        bit = (planes[:, j:j + 1] >> lanes) & np.uint32(1)
+        out |= bit << np.uint32(j)
+    return out.reshape(-1)

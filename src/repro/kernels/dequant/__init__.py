@@ -1,0 +1,4 @@
+from .ops import dequant
+from .ref import dequant_ref
+
+__all__ = ["dequant", "dequant_ref"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused per-feature dequantization (Bullion §2.4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(q, scale, zero, out_dtype=jnp.bfloat16):
+    """q: int8/uint8/int16[R, C] (affine) or uint16[R, C] (raw bf16 bits);
+    scale/zero: f32[C] per-feature params. Returns out_dtype[R, C]."""
+    if q.dtype == jnp.uint16:  # stored bf16 bit pattern -> float
+        f = jax.lax.bitcast_convert_type(
+            q.astype(jnp.uint32) << 16, jnp.float32)
+        return f.astype(out_dtype)
+    return (q.astype(jnp.float32) * scale[None, :] + zero[None, :]).astype(out_dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: vanilla (materialized-scores) attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: [B, H, S, D] -> [B, H, S, D]. Optional sliding window."""
+    B, H, S, D = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

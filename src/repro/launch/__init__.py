@@ -1,0 +1,2 @@
+# NOTE: intentionally empty — launch modules (dryrun) must be able to set
+# XLA_FLAGS before jax is first imported.

@@ -1,0 +1,396 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring the
+trip count — useless for scan-over-layers / microbatch-accumulation programs
+where ~all FLOPs live inside loops. This module re-derives
+
+  * flops               (dot ops; 2*M*N*K, batch dims included)
+  * bytes               (operand + result traffic of compute ops, fusion-
+                         boundary granularity — a structural HBM proxy)
+  * collective bytes    (per-device moved bytes, ring-algorithm factors)
+
+by walking the computation graph and multiplying loop bodies by their parsed
+trip counts (jax scans lower to `while` with an i32 induction variable
+compared LT against a constant).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+(?:e[0-9]+m[0-9]+fn?)?|pred)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_OP_KIND_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|[a-z0-9\[\],\s{}]*?)\s*"
+    r"([a-z][a-z0-9\-]*)\(")
+_CALLEE_RE = re.compile(r"(?:to_apply|calls|body)=(%?[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%?[\w.\-]+)")
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DIMS_ATTR = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_ATTR = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that don't move data (pure aliasing / metadata)
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "get-dimension-size", "opt-barrier"}
+
+
+def _shapes_in(s: str) -> list[tuple[str, int]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dtype, n))
+    return out
+
+
+def _bytes_of(s: str) -> int:
+    return sum(n * _DTYPE_BYTES.get(dt, 0) for dt, n in _shapes_in(s))
+
+
+def _elems_of(s: str) -> int:
+    return sum(n for _, n in _shapes_in(s))
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    line: str
+    result_type: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)   # var -> result type str
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    comment = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment.sub("", raw.rstrip())
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and ("->" in stripped or stripped.startswith("ENTRY")):
+                cur = Computation(m.group(1).lstrip("%"))
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name = dm.group(1).lstrip("%")
+        rest = line[dm.end():]
+        km = _OP_KIND_RE.search(line)
+        head = rest.split("(")[0].strip().split()
+        kind = km.group(1) if km else (head[-1] if head else "unknown")
+        # result type = text between '=' and the op kind keyword
+        rtype = rest[: rest.find(kind)] if kind in rest else rest
+        cur.types[name] = rtype
+        cur.ops.append(Op(name, kind, line, rtype))
+    return comps
+
+
+def _operand_names(line: str, kind: str) -> list[str]:
+    i = line.find(kind + "(")
+    if i < 0:
+        return []
+    depth = 0
+    start = i + len(kind) + 1
+    j = start
+    while j < len(line):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        j += 1
+    args = line[start:j]
+    names = re.findall(r"%([\w.\-]+)", args)
+    if not names:  # HLO without % sigils
+        names = [a.strip().split(" ")[-1] for a in args.split(",") if a.strip()]
+    return names
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _elems_of(op.result_type)
+    operands = _operand_names(op.line, op.kind)
+    if not operands:
+        return 0.0
+    lhs_t = comp.types.get(operands[0], "")
+    m = _SHAPE_RE.search(lhs_t)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    cm = _DIMS_ATTR.search(op.line)
+    k = 1
+    if cm and cm.group(1):
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(dims):
+                k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{(\{[^}]*\})", line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+def _collective_bytes(op: Op, comp: Computation, n_devices: int) -> float:
+    size = _bytes_of(op.result_type)
+    if size == 0:
+        return 0.0
+    n = _group_size(op.line, n_devices)
+    if op.kind.startswith("all-reduce"):
+        return size * 2 * (n - 1) / max(n, 1)
+    if op.kind.startswith("all-gather"):
+        return size * (n - 1) / max(n, 1)
+    if op.kind.startswith("reduce-scatter"):
+        return size * (n - 1)
+    if op.kind.startswith("all-to-all"):
+        return size * (n - 1) / max(n, 1)
+    return float(size)  # collective-permute
+
+
+def _is_inplace_update(callee: "Computation", res_bytes: int) -> bool:
+    """Fusion whose root is a dynamic-update-slice producing the full-size
+    result: XLA aliases the buffer; only the update slice moves."""
+    for op in callee.ops:
+        if op.kind == "dynamic-update-slice" and _bytes_of(op.result_type) == res_bytes:
+            return True
+    return False
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_operand_bytes(callee: "Computation") -> dict[int, int]:
+    """Per-parameter-index *touched* bytes for operands that are only
+    dynamic-sliced/gathered inside the fusion (scan bodies slice one layer /
+    one step out of stacked arrays — charging the full stack per iteration
+    would overcount by the trip count)."""
+    param_of: dict[str, int] = {}
+    for op in callee.ops:
+        if op.kind == "parameter":
+            m = _PARAM_IDX_RE.search(op.line)
+            if m:
+                param_of[op.name] = int(m.group(1))
+    sliced: dict[int, int] = {}
+    consumers: dict[str, list[Op]] = defaultdict(list)
+    for op in callee.ops:
+        for o in _operand_names(op.line, op.kind):
+            consumers[o].append(op)
+    def resolve(uses, depth=0):
+        """Follow through layout-only ops (bitcast/reshape/copy)."""
+        out = []
+        for u in uses:
+            if u.kind in ("bitcast", "reshape", "copy", "transpose") and depth < 3:
+                out.extend(resolve(consumers.get(u.name, []), depth + 1))
+            else:
+                out.append(u)
+        return out
+
+    for pname, pidx in param_of.items():
+        uses = resolve(consumers.get(pname, []))
+        if uses and all(u.kind in ("dynamic-slice", "gather") for u in uses):
+            sliced[pidx] = sum(_bytes_of(u.result_type) for u in uses)
+    return sliced
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(while_line: str, cond: Computation | None) -> int:
+    """Prefer XLA's own known_trip_count annotation; fall back to parsing the
+    condition (ROOT compare(iv, constant(N)), direction=LT)."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return max(1, int(m.group(1)))
+    if cond is None:
+        return 1
+    consts = {}
+    for op in cond.ops:
+        m = _CONST_RE.search(op.line)
+        if m:
+            consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.kind == "compare" and "direction=LT" in op.line:
+            for o in _operand_names(op.line, "compare"):
+                if o in consts:
+                    return max(1, consts[o])
+    return 1
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
+
+
+def _comp_cost(comp: Computation, comps, n_devices, memo, in_fusion=False) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    c = Cost()
+    for op in comp.ops:
+        kind = op.kind
+        if kind == "while":
+            callee = _CALLEE_RE.search(op.line)
+            condm = _COND_RE.search(op.line)
+            cond = comps.get(condm.group(1).lstrip("%")) if condm else None
+            trips = _trip_count(op.line, cond)
+            if callee and callee.group(1).lstrip("%") in comps:
+                body = _comp_cost(comps[callee.group(1).lstrip("%")], comps,
+                                  n_devices, memo)
+                c.add(body, trips)
+            continue
+        if kind in ("call", "fusion", "async-start", "custom-call"):
+            callee = _CALLEE_RE.search(op.line)
+            if callee and callee.group(1).lstrip("%") in comps:
+                inner = _comp_cost(comps[callee.group(1).lstrip("%")], comps,
+                                   n_devices, memo,
+                                   in_fusion=(kind == "fusion"))
+                # fusion: inner dot flops count; inner byte traffic does not
+                c.flops += inner.flops
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll_by_kind.items():
+                    c.coll_by_kind[k] += v
+                for k, v in inner.coll_counts.items():
+                    c.coll_counts[k] += v
+                if kind != "fusion":
+                    c.bytes += inner.bytes
+            # fusion boundary traffic:
+            if kind == "fusion":
+                callee_comp = comps.get(callee.group(1).lstrip("%")) if callee else None
+                res_b = _bytes_of(op.result_type)
+                operands = _operand_names(op.line, kind)
+                sliced = _fusion_operand_bytes(callee_comp) if callee_comp else {}
+                if callee_comp is not None and _is_inplace_update(callee_comp, res_b):
+                    # scan-accumulator pattern: DUS into an aliased buffer —
+                    # charge only the non-aliased (update) operands, 2x
+                    for i, o in enumerate(operands):
+                        ob = _bytes_of(comp.types.get(o, ""))
+                        if ob != res_b:
+                            c.bytes += 2 * min(ob, sliced.get(i, ob))
+                else:
+                    c.bytes += res_b
+                    for i, o in enumerate(operands):
+                        ob = _bytes_of(comp.types.get(o, ""))
+                        c.bytes += min(ob, sliced.get(i, ob))
+            continue
+        if kind == "conditional":
+            branches = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+            if branches:
+                costs = []
+                for b in branches.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b in comps:
+                        costs.append(_comp_cost(comps[b], comps, n_devices, memo))
+                if costs:
+                    worst = max(costs, key=lambda x: x.flops + x.bytes)
+                    c.add(worst)
+            continue
+        if any(kind.startswith(cl) for cl in COLLECTIVES):
+            if kind.endswith("-done"):
+                continue
+            cb = _collective_bytes(op, comp, n_devices)
+            base = next(cl for cl in COLLECTIVES if kind.startswith(cl))
+            c.coll_bytes += cb
+            c.coll_by_kind[base] += cb
+            c.coll_counts[base] += 1
+            c.bytes += _bytes_of(op.result_type)
+            continue
+        if kind in ("dot", "convolution"):
+            c.flops += _dot_flops(op, comp)
+        if kind in _FREE_OPS:
+            continue
+        if in_fusion:
+            continue  # inner elementwise traffic is fused away
+        if kind == "dynamic-update-slice":
+            # in-place on TPU: traffic = read + write of the *update* slice,
+            # not the whole aliased buffer
+            ops_ = _operand_names(op.line, kind)
+            upd = comp.types.get(ops_[1], "") if len(ops_) > 1 else ""
+            c.bytes += 2 * _bytes_of(upd)
+        elif kind in ("dynamic-slice", "gather"):
+            c.bytes += 2 * _bytes_of(op.result_type)   # read source slice + write
+        elif kind == "scatter":
+            ops_ = _operand_names(op.line, kind)
+            upd = comp.types.get(ops_[-1], "") if ops_ else ""
+            c.bytes += 2 * _bytes_of(upd)
+        elif kind in ("dot", "convolution", "copy", "sort"):
+            # memory-bound structural ops: operands + result traffic
+            c.bytes += _bytes_of(op.result_type)
+            for o in _operand_names(op.line, kind):
+                c.bytes += _bytes_of(comp.types.get(o, ""))
+        else:
+            # generic elementwise op: charge the write only — on the TPU
+            # target these fuse into neighbours; counting reads too would
+            # treat the CPU backend's unfused HLO as if every intermediate
+            # round-tripped HBM (see DESIGN.md §Roofline method)
+            c.bytes += _bytes_of(op.result_type)
+    memo[comp.name] = c
+    return c
+
+
+def analyze(hlo_text: str, n_devices: int, entry: str | None = None) -> dict:
+    comps = parse_module(hlo_text)
+    # entry computation: the one starting with ENTRY in text order
+    entry_name = None
+    for line in hlo_text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry_name = m.group(1).lstrip("%")
+            break
+    if entry_name is None or entry_name not in comps:
+        entry_name = max(comps, key=lambda k: len(comps[k].ops))
+    memo: dict = {}
+    c = _comp_cost(comps[entry_name], comps, n_devices, memo)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.coll_bytes,
+        "collective_by_kind": dict(c.coll_by_kind),
+        "collective_counts": dict(c.coll_counts),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,25 @@
+"""Production mesh definitions (TPU v5e numbers).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets --xla_force_host_platform_device_count first.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for unit tests (requires >= data*model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

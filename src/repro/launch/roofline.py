@@ -1,0 +1,126 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs(per device) / peak_FLOP/s
+  memory term     = HLO_bytes(per device) / HBM_bw
+  collective term = Σ collective bytes moved per device / ICI link bw
+
+cost_analysis() provides FLOPs/bytes; collective bytes are parsed from the
+post-SPMD optimized HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), weighted by ring-algorithm factors derived
+from each op's replica group size.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f16": 2, "bf16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+fn?)?)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Sum bytes moved per device per collective kind (ring-algo factors)."""
+    by_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count only the -start
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        if size == 0:
+            continue
+        n = _group_size(line, n_devices)
+        if kind == "all-reduce":
+            moved = size * 2 * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            moved = size * (n - 1) / max(n, 1)       # size is the gathered output
+        elif kind == "reduce-scatter":
+            moved = size * (n - 1)                   # size is the scattered shard
+        elif kind == "all-to-all":
+            moved = size * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            moved = size
+        by_kind[kind] += moved
+        counts[kind] += 1
+    return {"bytes_by_kind": dict(by_kind), "counts": dict(counts),
+            "total_bytes": sum(by_kind.values())}
+
+
+def model_flops(cfg, shape, n_params_total: int, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    tokens = shape.global_batch  # one step
+    return 2.0 * n_params_active * tokens
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    ct = flops_per_dev / PEAK_FLOPS_BF16
+    mt = bytes_per_dev / HBM_BW
+    xt = coll_bytes_per_dev / ICI_BW
+    dom = max((ct, "compute"), (mt, "memory"), (xt, "collective"))[1]
+    return {"compute_s": ct, "memory_s": mt, "collective_s": xt,
+            "dominant": dom,
+            "bound_s": max(ct, mt, xt),
+            "roofline_frac": ct / max(ct, mt, xt) if max(ct, mt, xt) > 0 else 0.0}
+
+
+def active_params(cfg, n_params_total: int) -> int:
+    """Active params per token for MoE configs (routed experts scaled by k/E)."""
+    if cfg.n_experts == 0:
+        return n_params_total
+    ff = cfg.moe_ff or cfg.d_ff
+    routed_per_layer = 3 * cfg.d_model * ff * cfg.n_experts
+    n_moe_layers = sum(rep * sum(1 for b in blocks if b.endswith(":moe"))
+                       for blocks, rep in cfg.segments)
+    routed_total = routed_per_layer * n_moe_layers
+    active_routed = routed_total * cfg.top_k / cfg.n_experts
+    return int(n_params_total - routed_total + active_routed)

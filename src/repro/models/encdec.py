@@ -1,0 +1,159 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (mel + 2x conv) is STUBBED per the assignment: the model
+consumes precomputed frame embeddings [B, S_enc, d]. Encoder layers are
+bidirectional; decoder layers are causal self-attention + cross-attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import P, is_decl
+from .config import ModelConfig
+from .layers import (attention_decl, attn_out, attn_qkv, dot_attention,
+                     gelu_mlp, gelu_mlp_decl, layernorm, layernorm_decl,
+                     sinusoidal_pos)
+from .transformer import Ctx, stack_decl
+
+
+def enc_block_decl(cfg: ModelConfig) -> dict:
+    return {
+        "ln_attn": layernorm_decl(cfg.d_model),
+        "attn": attention_decl(cfg.d_model, cfg.n_heads, cfg.n_heads, cfg.head_dim),
+        "ln_mlp": layernorm_decl(cfg.d_model),
+        "mlp": gelu_mlp_decl(cfg.d_model, cfg.d_ff),
+    }
+
+
+def dec_block_decl(cfg: ModelConfig) -> dict:
+    return {
+        "ln_self": layernorm_decl(cfg.d_model),
+        "self_attn": attention_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim),
+        "ln_cross": layernorm_decl(cfg.d_model),
+        "cross_attn": attention_decl(cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                     cfg.head_dim),
+        "ln_mlp": layernorm_decl(cfg.d_model),
+        "mlp": gelu_mlp_decl(cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_decl(cfg: ModelConfig) -> dict:
+    enc = cfg.encoder
+    n_dec = cfg.n_layers
+    return {
+        "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed",
+                   scale=0.02),
+        "enc_blocks": stack_decl(enc_block_decl(cfg), enc.n_layers),
+        "enc_norm": layernorm_decl(cfg.d_model),
+        "dec_blocks": stack_decl(dec_block_decl(cfg), n_dec),
+        "dec_norm": layernorm_decl(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, ctx: Ctx):
+    """frames: [B, S_enc, d] stubbed frontend output."""
+    S = frames.shape[1]
+    pos_emb = jnp.asarray(sinusoidal_pos(S, cfg.d_model), frames.dtype)
+    x = frames + pos_emb[None]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(h, ps):
+        xn = layernorm(ps["ln_attn"], h)
+        q, k, v = attn_qkv(ps["attn"], xn, positions, use_rope=False)
+        o = dot_attention(q, k, v, positions, positions, causal=False)
+        h = h + attn_out(ps["attn"], o)
+        h = h + gelu_mlp(ps["mlp"], layernorm(ps["ln_mlp"], h))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if ctx.mode == "train" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return layernorm(params["enc_norm"], x)
+
+
+def cross_kv(params, enc_out):
+    """Precompute cross-attention K/V for all decoder layers: [L, B, S, H, dh]."""
+    def per_layer(ps):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, ps["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, ps["cross_attn"]["wv"].astype(enc_out.dtype))
+        return k, v
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def decode_blocks(params, x, cfg: ModelConfig, ctx: Ctx, enc_k, enc_v,
+                  cache=None):
+    """x: [B, T, d] token embeds; enc_k/enc_v: [L, B, S_enc, H, dh]."""
+    B, T, _ = x.shape
+    S_enc = enc_k.shape[2]
+    enc_pos = jnp.arange(S_enc, dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        if cache is not None:
+            ps, (ek, ev), cs = xs
+        else:
+            ps, (ek, ev) = xs
+            cs = None
+        # self attention (causal, cached in decode)
+        xn = layernorm(ps["ln_self"], h)
+        if ctx.mode == "decode":
+            pos = ctx.cache_pos
+            positions = pos[None]
+            q, k_new, v_new = attn_qkv(ps["self_attn"], xn, positions,
+                                       rope_theta=cfg.rope_theta)
+            k = jax.lax.dynamic_update_slice_in_dim(cs["k"], k_new.astype(cs["k"].dtype), pos, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cs["v"], v_new.astype(cs["v"].dtype), pos, axis=1)
+            S = k.shape[1]
+            kv_pos = jnp.arange(S, dtype=jnp.int32)
+            valid = jnp.broadcast_to((kv_pos <= pos)[None], (B, S))
+            o = dot_attention(q, k.astype(h.dtype), v.astype(h.dtype),
+                              positions, kv_pos, causal=True, kv_valid=valid)
+            new_cs = {"k": k, "v": v}
+        else:
+            positions = ctx.positions
+            q, k, v = attn_qkv(ps["self_attn"], xn, positions,
+                               rope_theta=cfg.rope_theta)
+            o = dot_attention(q, k, v, positions, positions, causal=True)
+            new_cs = None
+            if cache is not None:  # prefill
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros_like(cs["k"]), k.astype(cs["k"].dtype), 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros_like(cs["v"]), v.astype(cs["v"].dtype), 0, axis=1)
+                new_cs = {"k": ck, "v": cv}
+        h = h + attn_out(ps["self_attn"], o)
+        # cross attention over encoder output
+        xn = layernorm(ps["ln_cross"], h)
+        qc = jnp.einsum("bsd,dhk->bshk", xn, ps["cross_attn"]["wq"].astype(h.dtype))
+        q_pos = ctx.cache_pos[None] if ctx.mode == "decode" else ctx.positions
+        oc = dot_attention(qc, ek.astype(h.dtype), ev.astype(h.dtype),
+                           q_pos, enc_pos, causal=False)
+        h = h + attn_out(ps["cross_attn"], oc)
+        # mlp
+        h = h + gelu_mlp(ps["mlp"], layernorm(ps["ln_mlp"], h))
+        return h, new_cs
+
+    body_fn = jax.checkpoint(body) if ctx.mode == "train" else body
+    xs = (params["dec_blocks"], (enc_k, enc_v))
+    if cache is not None:
+        xs = xs + (cache,)
+    x, new_cache = jax.lax.scan(body_fn, x, xs)
+    x = layernorm(params["dec_norm"], x)
+    return x, new_cache
+
+
+def encdec_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                 dtype=jnp.bfloat16) -> dict:
+    n_dec = cfg.n_layers
+    shape = (n_dec, batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"pos": jnp.zeros((), jnp.int32),
+            "self_kv": {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+            "enc_k": jnp.zeros((n_dec, batch, cfg.encoder.seq, cfg.n_heads,
+                                cfg.head_dim), dtype),
+            "enc_v": jnp.zeros((n_dec, batch, cfg.encoder.seq, cfg.n_heads,
+                                cfg.head_dim), dtype)}

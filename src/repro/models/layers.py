@@ -1,0 +1,188 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full / sliding-window
+/ local / cross), SwiGLU + GELU MLPs.  Pure functions over param dicts."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_decl(d: int) -> dict:
+    return {"scale": P((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_decl(d: int) -> dict:
+    return {"scale": P((d,), (None,), init="ones"),
+            "bias": P((d,), (None,), init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angles = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(angles), np.cos(angles)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_decl(d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool = False, fused: bool = False) -> dict:
+    if fused:
+        # single in-projection [d, (H + 2*Hkv) * dh]: one x all-gather / one
+        # dx partial all-reduce per block instead of three (§Perf)
+        decl = {
+            "wqkv": P((d, (n_heads + 2 * n_kv) * head_dim), ("embed", "heads")),
+            "wo": P((n_heads, head_dim, d), ("heads", None, "embed")),
+        }
+    else:
+        decl = {
+            "wq": P((d, n_heads, head_dim), ("embed", "heads", None)),
+            "wk": P((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+            "wv": P((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+            "wo": P((n_heads, head_dim, d), ("heads", None, "embed")),
+        }
+    if qk_norm:
+        decl["q_norm"] = rmsnorm_decl(head_dim)
+        decl["k_norm"] = rmsnorm_decl(head_dim)
+    return decl
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    """[Sq, Skv] additive mask from position vectors."""
+    m = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        m &= (q_pos[:, None] - kv_pos[None, :]) < window
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def dot_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                  kv_valid=None):
+    """GQA attention.
+    q: [B,Sq,H,D]  k,v: [B,Skv,Hkv,D]  q_pos: [Sq]  kv_pos: [Skv]
+    kv_valid: optional [B,Skv] bool (cache slots filled)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    scores = scores + _mask(q_pos, kv_pos, causal, window)[None, None, None]
+    if kv_valid is not None:
+        scores = scores + jnp.where(kv_valid, 0.0, NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def attn_qkv(p, x, positions, *, rope_theta=10000.0, qk_norm=False,
+             use_rope=True, n_heads=None, n_kv=None, head_dim=None):
+    """Project to q,k,v with optional RoPE + qk-norm."""
+    if "wqkv" in p:
+        B, S, _ = x.shape
+        qkv = jnp.einsum("bsd,df->bsf", x, p["wqkv"].astype(x.dtype))
+        H, Hkv, D = n_heads, n_kv, head_dim
+        q = qkv[..., : H * D].reshape(B, S, H, D)
+        k = qkv[..., H * D: (H + Hkv) * D].reshape(B, S, Hkv, D)
+        v = qkv[..., (H + Hkv) * D:].reshape(B, S, Hkv, D)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def cross_attention_decl(d: int, n_heads: int, head_dim: int) -> dict:
+    return attention_decl(d, n_heads, n_heads, head_dim)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_decl(d: int, ff: int) -> dict:
+    return {"w_gate": P((d, ff), ("embed", "ff")),
+            "w_up": P((d, ff), ("embed", "ff")),
+            "w_down": P((ff, d), ("ff", "embed"))}
+
+
+def swiglu(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_decl(d: int, ff: int) -> dict:
+    return {"w_up": P((d, ff), ("embed", "ff")),
+            "b_up": P((ff,), ("ff",), init="zeros"),
+            "w_down": P((ff, d), ("ff", "embed")),
+            "b_down": P((d,), (None,), init="zeros")}
+
+
+def gelu_mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype)) + p["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype)) + p["b_down"].astype(x.dtype)

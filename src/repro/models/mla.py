@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V2 style, as used by MiniCPM3).
+
+The KV cache stores only the compressed latent (kv_lora_rank) plus the shared
+RoPE key — decode uses the *absorbed* formulation (query projected into latent
+space), so per-token decode cost is ~MQA with head_dim == kv_lora_rank and the
+cache stays compressed.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .base import P
+from .layers import NEG_INF, rmsnorm, rmsnorm_decl, rope
+
+
+def mla_decl(cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "wq_a": P((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": rmsnorm_decl(m.q_lora_rank),
+        "wq_b": P((m.q_lora_rank, H, dn + dr), (None, "heads", None)),
+        "wkv_a": P((d, m.kv_lora_rank + dr), ("embed", None)),
+        "kv_norm": rmsnorm_decl(m.kv_lora_rank),
+        "wkv_b": P((m.kv_lora_rank, H, dn + dv), (None, "heads", None)),
+        "wo": P((H, dv, d), ("heads", None, "embed")),
+    }
+
+
+def _project_q(p, x, positions, cfg):
+    m = cfg.mla
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype))
+    q = jnp.einsum("bsr,rhk->bshk", rmsnorm(p["q_norm"], cq),
+                   p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x, positions, cfg):
+    m = cfg.mla
+    dr = m.qk_rope_head_dim
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    ckv, k_rope_raw = ckv_full[..., :m.kv_lora_rank], ckv_full[..., m.kv_lora_rank:]
+    ckv = rmsnorm(p["kv_norm"], ckv)
+    k_rope = rope(k_rope_raw[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, k_rope
+
+
+def mla_attention(p, x, positions, cfg, cache=None, cache_pos=None):
+    """Returns (out, new_cache). cache = {"ckv": [B,S,r], "kr": [B,S,dr]}.
+
+    train/prefill: expand latents to full k/v (matmul-friendly).
+    decode (T==1 with cache): absorbed form over the compressed cache."""
+    m = cfg.mla
+    B, T, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope = _project_q(p, x, positions, cfg)
+    ckv_new, kr_new = _latent_kv(p, x, positions, cfg)
+
+    if cache is not None and T == 1:
+        # -- absorbed decode --
+        pos = cache_pos
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+        S = ckv.shape[1]
+        w_k = p["wkv_b"][..., :dn].astype(x.dtype)          # [r, H, dn]
+        w_v = p["wkv_b"][..., dn:].astype(x.dtype)          # [r, H, dv]
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                             ckv.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                               kr.astype(jnp.float32))) * scale
+        valid = jnp.arange(S) <= pos
+        scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhqs,bsr->bqhr", probs.astype(ckv.dtype), ckv)
+        o = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_v)
+        out = jnp.einsum("bqhd,hdo->bqo", o, p["wo"].astype(x.dtype))
+        return out, {"ckv": ckv, "kr": kr}
+
+    # -- train / prefill: expand latents --
+    kv = jnp.einsum("bsr,rhk->bshk", ckv_new, p["wkv_b"].astype(x.dtype))
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(kr_new[:, :, None, :], (B, T, H, dr))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    causal = positions[:, None] >= positions[None, :]
+    scores = jnp.where(causal[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+    out = jnp.einsum("bqhd,hdo->bqo", o, p["wo"].astype(x.dtype))
+
+    new_cache = None
+    if cache is not None:  # prefill fills the compressed cache
+        S = cache["ckv"].shape[1]
+        ckv_c = jnp.zeros_like(cache["ckv"])
+        kr_c = jnp.zeros_like(cache["kr"])
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, ckv_new.astype(ckv_c.dtype), 0, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(kr_c, kr_new.astype(kr_c.dtype), 0, axis=1)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    return out, new_cache
+
+
+def mla_cache_decl(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma): gated linear recurrence
+with input-dependent retention, temporal conv, GeGLU-style gating.  Train path
+uses an associative scan (parallel over sequence); decode carries O(1) state."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import P
+from .layers import rmsnorm, rmsnorm_decl
+
+RG_C = 8.0  # Griffin's constant c
+
+
+def rglru_decl(cfg) -> dict:
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    H = cfg.n_heads  # block-diagonal gate heads
+    bd = lru // H
+    return {
+        "norm": rmsnorm_decl(d),
+        "w_gate_in": P((d, lru), ("embed", "lru")),
+        "w_main_in": P((d, lru), ("embed", "lru")),
+        "conv_w": P((cfg.conv_width, lru), (None, "lru")),
+        "conv_b": P((lru,), ("lru",), init="zeros"),
+        "lam": P((lru,), ("lru",), init="ones"),          # Λ (retention logits)
+        "wa": P((H, bd, bd), ("heads", None, None)),      # recurrence gate (block-diag)
+        "ba": P((lru,), ("lru",), init="zeros"),
+        "wx": P((H, bd, bd), ("heads", None, None)),      # input gate (block-diag)
+        "bx": P((lru,), ("lru",), init="zeros"),
+        "w_out": P((lru, d), ("lru", "embed")),
+    }
+
+
+def _block_diag(x, w, H):
+    """x: [B,T,lru] -> block-diagonal linear via heads: [B,T,H,bd]@[H,bd,bd]."""
+    B, T, lru = x.shape
+    bd = lru // H
+    xh = x.reshape(B, T, H, bd)
+    return jnp.einsum("bthi,hij->bthj", xh, w.astype(x.dtype)).reshape(B, T, lru)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv, width K. x: [B,T,lru]; state: [B,K-1,lru]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # [B, T+K-1, lru]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return out + b.astype(x.dtype), new_state
+
+
+def rglru_block(p, x, cache=None, *, cfg):
+    """cache: {"h": [B,lru] f32, "conv": [B,K-1,lru] f32} or None (train)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    xn = rmsnorm(p["norm"], x)
+
+    gate = jax.nn.gelu(jnp.einsum("btd,dl->btl", xn, p["w_gate_in"].astype(x.dtype)))
+    main = jnp.einsum("btd,dl->btl", xn, p["w_main_in"].astype(x.dtype))
+    conv_state = cache["conv"] if cache is not None else None
+    main, new_conv = _causal_conv(main, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(_block_diag(main, p["wa"], H) + p["ba"].astype(x.dtype))
+    i = jax.nn.sigmoid(_block_diag(main, p["wx"], H) + p["bx"].astype(x.dtype))
+    log_a = (-RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))                      # [B,T,lru] <= 0
+    a = jnp.exp(log_a)
+    gated_x = (i * main).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if cache is not None and T == 1:
+        h0 = cache["h"]
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        if cache is not None:  # prefill: fold in the initial state
+            hs = b_s + a_s * cache["h"][:, None, :]
+        else:
+            hs = b_s
+        new_h = hs[:, -1]
+
+    y = (gate * hs.astype(x.dtype))
+    out = jnp.einsum("btl,ld->btd", y, p["w_out"].astype(x.dtype))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": new_h.astype(jnp.float32),
+                     "conv": new_conv.astype(jnp.float32)}
+    return x + out, new_cache
+
+
+def rglru_cache_decl(cfg, batch: int) -> dict:
+    lru = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, lru), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), jnp.float32)}

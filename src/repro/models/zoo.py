@@ -1,0 +1,148 @@
+"""Model zoo entry point: build(config) -> Model with a uniform API.
+
+Model.loss / prefill / decode_step are the three functions the launcher
+lowers (train_4k -> train_step over loss; prefill_32k -> prefill;
+decode_32k / long_500k -> decode_step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_mod
+from . import transformer as tf
+from .base import abstract_tree, init_tree, param_count, spec_tree
+from .config import ModelConfig
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    dist: Any = None
+
+    def __post_init__(self):
+        self.is_encdec = self.cfg.encoder is not None
+        self.decl = (encdec_mod.encdec_decl(self.cfg) if self.is_encdec
+                     else tf.model_decl(self.cfg))
+
+    # -- params ---------------------------------------------------------------
+    def init(self, rng, dtype=jnp.float32):
+        return init_tree(self.decl, rng, dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_tree(self.decl, dtype)
+
+    def param_specs(self):
+        rules = self.dist.rules if self.dist else None
+        if rules is None:
+            from .base import ShardingRules
+            rules = ShardingRules(embed=None, heads=None, kv_heads=None,
+                                  ff=None, vocab=None, experts=None, lru=None,
+                                  batch=None)
+        return spec_tree(self.decl, rules)
+
+    @property
+    def n_params(self) -> int:
+        return param_count(self.decl)
+
+    def _dtype(self):
+        return jnp.dtype(self.cfg.compute_dtype)
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: {"tokens": [B, S+1]} (+ "frames" for enc-dec)."""
+        cfg = self.cfg
+        dt = self._dtype()
+        if cfg.cast_params_once and dt != jnp.float32:
+            # one sharded cast before the layer scan: every FSDP all-gather
+            # (and, via AD, every gradient reduce-scatter) moves `dt` instead
+            # of f32 — 2x less ICI traffic. Master weights stay f32 in the
+            # optimizer; AD converts grads back through the cast.
+            params = jax.tree.map(lambda p: p.astype(dt)
+                                  if p.dtype == jnp.float32 else p, params)
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        T = inputs.shape[1]
+        positions = jnp.arange(T, dtype=jnp.int32)
+        ctx = tf.Ctx(cfg=cfg, dist=self.dist, mode="train", positions=positions)
+        if self.is_encdec:
+            frames = batch["frames"].astype(dt)
+            enc_out = encdec_mod.encode(params, frames, cfg, ctx)
+            ek, ev = encdec_mod.cross_kv(params, enc_out)
+            x = tf.embed_tokens(params, inputs, cfg, dt)
+            x, _ = encdec_mod.decode_blocks(params, x, cfg, ctx, ek, ev)
+            logits = tf.logits_fn(params, x, cfg)
+            return _xent(logits, labels)
+        x = tf.embed_tokens(params, inputs, cfg, dt)
+        x, _, aux = tf.forward(params, x, cfg, ctx)
+        logits = tf.logits_fn(params, x, cfg)
+        return _xent(logits, labels) + cfg.aux_loss_weight * aux
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        if self.is_encdec:
+            return encdec_mod.encdec_cache(self.cfg, batch, seq_len, dtype)
+        return tf.init_cache(self.cfg, batch, seq_len, dtype)
+
+    def prefill(self, params, batch, cache):
+        """Fill the cache from a prompt; returns (last_token_logits, cache)."""
+        cfg = self.cfg
+        dt = self._dtype()
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        positions = jnp.arange(T, dtype=jnp.int32)
+        ctx = tf.Ctx(cfg=cfg, dist=self.dist, mode="prefill",
+                     positions=positions)
+        if self.is_encdec:
+            frames = batch["frames"].astype(dt)
+            enc_out = encdec_mod.encode(params, frames, cfg, ctx)
+            ek, ev = encdec_mod.cross_kv(params, enc_out)
+            x = tf.embed_tokens(params, tokens, cfg, dt)
+            x, self_kv = encdec_mod.decode_blocks(params, x, cfg, ctx, ek, ev,
+                                                  cache=cache["self_kv"])
+            logits = tf.logits_fn(params, x[:, -1:], cfg)
+            new_cache = {"pos": jnp.asarray(T, jnp.int32), "self_kv": self_kv,
+                         "enc_k": ek.astype(cache["enc_k"].dtype),
+                         "enc_v": ev.astype(cache["enc_v"].dtype)}
+            return logits[:, 0], new_cache
+        x = tf.embed_tokens(params, tokens, cfg, dt)
+        x, new_cache, _ = tf.forward(params, x, cfg, ctx, cache=cache)
+        new_cache["pos"] = jnp.asarray(T, jnp.int32)
+        logits = tf.logits_fn(params, x[:, -1:], cfg)
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: [B, 1] -> (logits [B, V], cache)."""
+        cfg = self.cfg
+        dt = self._dtype()
+        pos = cache["pos"]
+        ctx = tf.Ctx(cfg=cfg, dist=self.dist, mode="decode", cache_pos=pos)
+        x = tf.embed_tokens(params, tokens, cfg, dt)
+        if self.is_encdec:
+            x, self_kv = encdec_mod.decode_blocks(
+                params, x, cfg, ctx, cache["enc_k"], cache["enc_v"],
+                cache=cache["self_kv"])
+            logits = tf.logits_fn(params, x, cfg)
+            new_cache = dict(cache)
+            new_cache["self_kv"] = self_kv
+            new_cache["pos"] = pos + 1
+            return logits[:, 0], new_cache
+        x, new_cache, _ = tf.forward(params, x, cfg, ctx, cache=cache)
+        new_cache["pos"] = pos + 1
+        logits = tf.logits_fn(params, x, cfg)
+        return logits[:, 0], new_cache
+
+
+def build(cfg: ModelConfig, dist=None) -> Model:
+    return Model(cfg=cfg, dist=dist)

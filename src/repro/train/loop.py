@@ -1,0 +1,52 @@
+"""Training step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (scan) and optional gradient compression."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 accumulates grads over a scan — smooths HBM peaks and
+    gives the scheduler freedom to overlap per-microbatch collectives."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # [B, ...] -> [n, B/n, ...]
+        def resplit(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+        mb = jax.tree.map(resplit, batch)
+
+        def body(acc, one):
+            loss, g = jax.value_and_grad(loss_fn)(params, one)
+            return jax.tree.map(jnp.add, acc, (loss, g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss, grads), _ = jax.lax.scan(body, zero, mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, stats = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (reduced same-family configs on CPU):
+forward/train loss finiteness + shapes, and the strong invariant —
+prefill+decode with caches reproduces full-forward logits."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+from repro.models import transformer as tf
+from repro.models import zoo
+from repro.models.transformer import Ctx
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S):
+    tok = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok}
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(RNG, (B, cfg.encoder.seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_train_step_finite(arch):
+    cfg = configs.get_smoke(arch).scaled(compute_dtype="float32")
+    m = zoo.build(cfg)
+    params = m.init(RNG)
+    loss = jax.jit(m.loss)(params, _batch(cfg, 2, 17))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # one grad step moves the loss
+    g = jax.grad(m.loss)(params, _batch(cfg, 2, 17))
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert gn > 0 and jnp.isfinite(gn)
+
+
+def _full_logits(m, cfg, params, batch):
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    ctx = Ctx(cfg=cfg, dist=None, mode="prefill", positions=positions)
+    if m.is_encdec:
+        from repro.models import encdec as ed
+        enc = ed.encode(params, batch["frames"], cfg, ctx)
+        ek, ev = ed.cross_kv(params, enc)
+        x = tf.embed_tokens(params, tokens, cfg, jnp.float32)
+        x, _ = ed.decode_blocks(params, x, cfg, ctx, ek, ev)
+    else:
+        x = tf.embed_tokens(params, tokens, cfg, jnp.float32)
+        x, _, _ = tf.forward(params, x, cfg, ctx)
+    return tf.logits_fn(params, x, cfg)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = configs.get_smoke(arch).scaled(compute_dtype="float32",
+                                         capacity_factor=16.0)
+    m = zoo.build(cfg)
+    params = m.init(RNG)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S + 2)
+    tok = batch["tokens"]
+    ref = _full_logits(m, cfg, params, batch)
+    cache = m.init_cache(B, S + 4, dtype=jnp.float32)
+    pb = dict(batch)
+    pb["tokens"] = tok[:, :S]
+    lg, cache = m.prefill(params, pb, cache)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(lg - ref[:, S - 1]).max()) < 1e-3 * scale + 1e-4
+    for i in range(2):
+        lg, cache = m.decode_step(params, cache, tok[:, S + i:S + i + 1])
+        err = float(jnp.abs(lg - ref[:, S + i]).max())
+        assert err < 1e-3 * scale + 1e-4, (arch, i, err)
+
+
+def test_windowed_cache_rolls():
+    """Decoding past the window must match full forward (rolling buffer)."""
+    cfg = configs.get_smoke("mixtral_8x22b").scaled(
+        compute_dtype="float32", capacity_factor=16.0, window=8)
+    m = zoo.build(cfg)
+    params = m.init(RNG)
+    B, P, extra = 1, 6, 8            # decode well past the window
+    tok = jax.random.randint(RNG, (B, P + extra), 0, cfg.vocab)
+    ref = _full_logits(m, cfg, params, {"tokens": tok})
+    cache = m.init_cache(B, P + extra, dtype=jnp.float32)
+    lg, cache = m.prefill(params, {"tokens": tok[:, :P]}, cache)
+    for i in range(extra - 1):
+        lg, cache = m.decode_step(params, cache, tok[:, P + i:P + i + 1])
+        err = float(jnp.abs(lg - ref[:, P + i]).max())
+        assert err < 1e-3 * (float(jnp.abs(ref).max()) + 1e-6) + 1e-4, (i, err)
+
+
+def test_rwkv_chunked_matches_scan():
+    import numpy as np
+    from repro.models.rwkv6 import wkv_chunked, wkv_scan
+    rng = np.random.default_rng(0)
+    B, T, H, D = 2, 128, 3, 8
+    r, k, v = (jnp.asarray(rng.normal(size=(B, T, H, D)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(1.0 / (1.0 + np.exp(-rng.normal(1.0, 0.5, (B, T, H, D)))),
+                    jnp.float32)  # mild decays in (0,1)
+    u = jnp.asarray(rng.normal(size=(H, D)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, D, D)), jnp.float32)
+    y1, s1 = wkv_scan(r, k, v, w, u, s0)
+    y2, s2 = wkv_chunked(r, k, v, w, u, s0, chunk=32)
+    assert float(jnp.abs(y1 - y2).max()) < 2e-3, float(jnp.abs(y1 - y2).max())
+    assert float(jnp.abs(s1 - s2).max()) < 2e-3
+
+
+def test_param_counts_full_configs():
+    """Full configs must land near their nameplate sizes."""
+    expected = {
+        "llama3_2_1b": (1.0e9, 1.6e9),
+        "gemma3_12b": (10e9, 14e9),
+        "minicpm3_4b": (3.4e9, 5e9),
+        "starcoder2_15b": (14e9, 17e9),
+        "mixtral_8x22b": (120e9, 150e9),
+        "deepseek_moe_16b": (14e9, 20e9),
+        "recurrentgemma_9b": (7.5e9, 11e9),
+        "chameleon_34b": (30e9, 37e9),
+        "rwkv6_7b": (6e9, 9e9),
+        "whisper_base": (5e7, 1.2e8),
+    }
+    for arch, (lo, hi) in expected.items():
+        m = zoo.build(configs.get(arch))
+        assert lo <= m.n_params <= hi, (arch, m.n_params)

@@ -1,0 +1,74 @@
+"""Bullion-backed data pipeline tests."""
+
+import numpy as np
+
+from repro.data import BullionLoader, write_ads_table, write_lm_corpus
+from repro.data.loader import LoaderState
+
+
+def test_loader_batches_and_shapes(tmp_path):
+    path = str(tmp_path / "c.bln")
+    write_lm_corpus(path, n_docs=64, vocab=128, doc_len=256, rows_per_group=16)
+    loader = BullionLoader(path, batch_size=4, seq_len=64)
+    it = iter(loader)
+    seen = []
+    for _ in range(10):
+        batch, cursor = next(it)
+        assert batch.shape == (4, 65)
+        assert batch.dtype == np.int32
+        assert batch.min() >= 0 and batch.max() < 128
+        seen.append(batch)
+    # deterministic stream: batches differ (not stuck)
+    assert not np.array_equal(seen[0], seen[1])
+    loader.close()
+
+
+def test_loader_rank_sharding(tmp_path):
+    path = str(tmp_path / "c.bln")
+    write_lm_corpus(path, n_docs=64, vocab=128, doc_len=256, rows_per_group=8)
+    l0 = BullionLoader(path, batch_size=2, seq_len=64, rank=0, world=2)
+    l1 = BullionLoader(path, batch_size=2, seq_len=64, rank=1, world=2)
+    b0, _ = next(iter(l0))
+    b1, _ = next(iter(l1))
+    assert not np.array_equal(b0, b1)  # disjoint row groups
+    l0.close(); l1.close()
+
+
+def test_loader_cursor_resume(tmp_path):
+    path = str(tmp_path / "c.bln")
+    write_lm_corpus(path, n_docs=64, vocab=128, doc_len=256, rows_per_group=8)
+    loader = BullionLoader(path, batch_size=2, seq_len=64)
+    it = iter(loader)
+    batches, cursors = [], []
+    for _ in range(6):
+        b, c = next(it)
+        batches.append(b)
+        cursors.append(c)
+    loader.close()
+    # resume from cursor 2: group-aligned semantics — the resumed stream
+    # restarts exactly at the cursor's group boundary
+    cur = cursors[2]
+    resumed = BullionLoader(path, batch_size=2, seq_len=64,
+                            state=LoaderState(cur.epoch, cur.group))
+    rb, _ = next(iter(resumed))
+    from repro.core import BullionReader
+    with BullionReader(path) as r:
+        docs = []
+        for tbl in r.project(["tokens"], groups=range(cur.group, cur.group + 4)):
+            docs.extend(tbl["tokens"])
+    stream = np.concatenate([np.asarray(d, np.int32) for d in docs])
+    expect = stream[: 2 * 65].reshape(2, 65)
+    assert np.array_equal(rb, expect), "resume diverged from group boundary"
+    resumed.close()
+
+
+def test_ads_table_roundtrip(tmp_path):
+    path = str(tmp_path / "ads.bln")
+    stats = write_ads_table(path, n_rows=1024, n_sparse=3, n_dense=2,
+                            seq_len=16, rows_per_group=256)
+    assert stats["rows"] == 1024
+    from repro.core import BullionReader
+    with BullionReader(path) as r:
+        assert len(r.column_names) == 3 + 2 + 3
+        seqs = r.read_column("clk_seq_0")
+        assert len(seqs) == 1024 and all(len(s) == 16 for s in seqs)

@@ -1,0 +1,102 @@
+"""Deletion compliance (§2.1): levels, stacking, audits, Merkle maintenance."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (BullionReader, BullionWriter, ColumnSpec, Compliance,
+                        MerkleTree, delete_rows, page_hash, verify_deleted)
+from repro.core.footer import Sec
+
+
+@pytest.fixture
+def ads(tmp_path):
+    from repro.data.synthetic import write_ads_table
+    path = str(tmp_path / "ads.bln")
+    write_ads_table(path, n_rows=4096, n_sparse=4, n_dense=4, seq_len=16,
+                    rows_per_group=512)
+    return path
+
+
+def test_level2_physically_erases(ads):
+    with BullionReader(ads) as r:
+        uid = r.read_column("user_id")
+    victims = np.unique(uid)[:3]
+    rows = np.flatnonzero(np.isin(uid, victims))
+    stats = delete_rows(ads, rows, Compliance.LEVEL2)
+    audit = verify_deleted(ads, "user_id", victims)
+    assert audit["visible_rows"] == 0
+    assert audit["raw_occurrences"] == 0          # the regulatory requirement
+    assert stats.bytes_rewritten < stats.bytes_full_rewrite / 2
+
+
+def test_level1_hides_but_keeps(ads):
+    with BullionReader(ads) as r:
+        uid = r.read_column("user_id")
+    victims = np.unique(uid)[:1]
+    rows = np.flatnonzero(np.isin(uid, victims))
+    delete_rows(ads, rows, Compliance.LEVEL1)
+    audit = verify_deleted(ads, "user_id", victims)
+    assert audit["visible_rows"] == 0
+    assert audit["raw_occurrences"] == len(rows)  # still physically present
+
+
+def test_column_alignment_after_stacked_deletes(ads):
+    with BullionReader(ads) as r:
+        uid = r.read_column("user_id")
+        ts = r.read_column("ts")
+        seqs = r.read_column("clk_seq_0")
+    keep = np.ones(len(uid), bool)
+    for v in np.unique(uid)[[0, 5, 9]]:
+        rows = np.flatnonzero(np.isin(uid, [v]))
+        delete_rows(ads, rows, Compliance.LEVEL2)
+        keep[rows] = False
+    with BullionReader(ads) as r:
+        assert np.array_equal(r.read_column("ts"), ts[keep])
+        assert np.array_equal(r.read_column("user_id"), uid[keep])
+        got = r.read_column("clk_seq_0")
+        want = [s for s, k in zip(seqs, keep) if k]
+        assert all(np.array_equal(a, b) for a, b in zip(got, want))
+
+
+def test_repeat_delete_same_page(ads):
+    """Same page hit twice (incl. positions already deleted)."""
+    rows1 = np.arange(10, 20)
+    rows2 = np.arange(15, 30)  # overlaps rows1
+    delete_rows(ads, rows1, Compliance.LEVEL2)
+    delete_rows(ads, rows2, Compliance.LEVEL2)
+    with BullionReader(ads) as r:
+        ts = r.read_column("ts")
+    assert len(ts) == 4096 - 20
+    assert not np.isin(np.arange(10, 30), ts).any()
+
+
+def test_merkle_incremental_matches_recompute():
+    rng = np.random.default_rng(0)
+    pages = [rng.bytes(100) for _ in range(24)]
+    cks = np.asarray([page_hash(p) for p in pages], np.uint64)
+    starts = np.arange(0, 25, 4, dtype=np.uint64)  # 6 groups of 4
+    t1 = MerkleTree(cks.copy(), starts, 6, 1)
+    t2 = MerkleTree(cks.copy(), starts, 6, 1)
+    new_page = rng.bytes(100)
+    t1.update_page(9, new_page)              # incremental
+    t2.pages[9] = np.uint64(page_hash(new_page))
+    t2.full_recompute()                      # monolithic
+    assert t1.root == t2.root
+    assert np.array_equal(t1.groups, t2.groups)
+
+
+def test_footer_checksums_updated_on_delete(ads):
+    from repro.core import read_footer
+    fv0, _ = read_footer(ads)
+    root0 = fv0.file_checksum
+    delete_rows(ads, np.arange(5), Compliance.LEVEL2)
+    fv1, _ = read_footer(ads)
+    assert fv1.file_checksum != root0
+
+
+def test_level0_refuses():
+    with pytest.raises(ValueError):
+        delete_rows("/nonexistent", np.array([1]), Compliance.LEVEL0)

@@ -1,0 +1,117 @@
+"""Writer/reader/footer/quantization/multimodal format tests."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BullionReader, BullionWriter, ColumnSpec, MediaStore,
+                        MultimodalSample, QuantMode, QuantSpec,
+                        quality_filtered_read, quality_sort, read_footer,
+                        rejoin_dual_fp16, write_multimodal_dataset)
+
+
+@pytest.fixture
+def table(tmp_path):
+    rng = np.random.default_rng(0)
+    n = 3000
+    schema = [
+        ColumnSpec("a", "int64"),
+        ColumnSpec("b", "float32", quant=QuantSpec(QuantMode.BF16)),
+        ColumnSpec("c", "list<int64>"),
+        ColumnSpec("d", "string"),
+        ColumnSpec("e", "int8"),
+    ]
+    data = {
+        "a": rng.integers(0, 10**6, n),
+        "b": rng.normal(size=n).astype(np.float32),
+        "c": [rng.integers(0, 100, int(rng.integers(0, 20))).astype(np.int64)
+              for _ in range(n)],
+        "d": [b"s%d" % (i % 97) for i in range(n)],
+        "e": rng.integers(-100, 100, n).astype(np.int8),
+    }
+    path = str(tmp_path / "t.bln")
+    w = BullionWriter(path, schema, rows_per_group=512)
+    w.write_table(data)
+    stats = w.close()
+    return path, data, stats
+
+
+def test_roundtrip(table):
+    path, data, stats = table
+    with BullionReader(path) as r:
+        assert r.num_rows == len(data["a"])
+        assert np.array_equal(r.read_column("a"), data["a"])
+        assert np.abs(r.read_column("b") - data["b"]).max() < 0.01
+        got_c = r.read_column("c")
+        assert all(np.array_equal(x, y) for x, y in zip(got_c, data["c"]))
+        assert r.read_column("d") == data["d"]
+        assert np.array_equal(r.read_column("e"), data["e"])
+
+
+def test_projection_reads_only_needed_pages(table):
+    path, data, _ = table
+    with BullionReader(path) as r:
+        for tbl in r.project(["a"]):
+            pass
+        partial = r.stats.bytes_read
+    with BullionReader(path) as r:
+        for tbl in r.project(r.column_names):
+            pass
+        full = r.stats.bytes_read
+    assert partial < full / 2
+
+
+def test_footer_zero_copy_lookup(table):
+    path, _, _ = table
+    fv, _ = read_footer(path)
+    assert fv.column_index("c") == 2
+    with pytest.raises(KeyError):
+        fv.column_index("nope")
+    assert fv.column_names() == ["a", "b", "c", "d", "e"]
+    assert fv.n_groups == 6
+
+
+def test_group_iteration_order(table):
+    path, data, _ = table
+    with BullionReader(path) as r:
+        seen = 0
+        for tbl in r.project(["a"], groups=[1, 3]):
+            n = len(tbl["a"])
+            assert np.array_equal(tbl["a"], data["a"][512 * (1 if seen == 0 else 3):][:n])
+            seen += 1
+    assert seen == 2
+
+
+def test_quality_sort_and_filtered_read(tmp_path):
+    rng = np.random.default_rng(0)
+    samples = [MultimodalSample(
+        text=b"t%d" % i, quality=float(rng.random()),
+        embedding=rng.normal(size=8).astype(np.float32),
+        frames=bytes([i % 256] * 16), media_key=i) for i in range(1000)]
+    meta = str(tmp_path / "m.bln")
+    media = str(tmp_path / "m.media")
+    write_multimodal_dataset(meta, media, samples, rows_per_group=100)
+    tables, stats = quality_filtered_read(meta, ["quality"], 0.1)
+    q = np.concatenate([t["quality"] for t in tables])
+    assert len(q) == 100
+    top = np.sort([s.quality for s in samples])[::-1][:100]
+    assert np.allclose(np.sort(q)[::-1], top, atol=1e-6)
+    blobs = MediaStore(media).read([5])
+    assert blobs[5] == samples[5].frames * 8
+
+
+def test_dual_fp16(tmp_path):
+    from repro.core import quantize
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=4096).astype(np.float32)
+    hi = quantize(x, QuantSpec(QuantMode.DUAL_FP16_HI))
+    lo = quantize(x, QuantSpec(QuantMode.DUAL_FP16_LO))
+    err = np.abs(rejoin_dual_fp16(hi, lo) - x).max()
+    assert err < 1e-5
+
+
+def test_checksum_stored(table):
+    path, _, _ = table
+    fv, _ = read_footer(path)
+    assert fv.file_checksum != 0

@@ -1,0 +1,74 @@
+"""Trip-count-aware HLO cost model: the roofline's foundation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    a = analyze(_text(lambda x, w: x @ w, x, w), 1)
+    assert a["flops"] == 2 * 256 * 512 * 128
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    single = analyze(_text(lambda x, w: x @ w, x, w), 1)["flops"]
+    scanned_f = analyze(_text(scanned, x, w), 1)["flops"]
+    assert abs(scanned_f / single - 12) < 0.01
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    single = analyze(_text(lambda x, w: x @ w, x, w), 1)["flops"]
+    nested_f = analyze(_text(nested, x, w), 1)["flops"]
+    assert abs(nested_f / single - 15) < 0.01
+
+
+def test_grad_counts_more_than_forward():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    fwd = analyze(_text(lambda x, w: jnp.sum(jnp.tanh(x @ w)), x, w), 1)["flops"]
+    bwd = analyze(_text(jax.grad(lambda x, w: jnp.sum(jnp.tanh(x @ w)),
+                                 argnums=1), x, w), 1)["flops"]
+    assert bwd >= 2 * fwd  # fwd + two bwd matmuls (minus dx maybe dropped)
+
+
+def test_bytes_scale_with_scan():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(x):
+        def body(c, _):
+            return jnp.tanh(c), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    one = analyze(_text(lambda x: jnp.tanh(x), x), 1)["bytes"]
+    ten = analyze(_text(scanned, x), 1)["bytes"]
+    assert ten > 5 * one

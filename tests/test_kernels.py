@@ -1,0 +1,81 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitunpack import bitunpack, bitunpack_ref, pack_bp32
+from repro.kernels.dequant import dequant, dequant_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+@pytest.mark.parametrize("width", [1, 2, 3, 5, 8, 13, 16, 24, 31, 32])
+def test_bitunpack_widths(width):
+    rng = np.random.default_rng(width)
+    n = 32 * 256
+    hi = (1 << width) - 1 if width < 32 else 0xFFFFFFFF
+    vals = (rng.integers(0, 1 << 31, n) & hi).astype(np.uint32)
+    planes = pack_bp32(vals, width)
+    out = np.asarray(bitunpack(planes, width, n_values=n))
+    assert np.array_equal(out, vals)
+    assert np.array_equal(bitunpack_ref(planes, width)[:n], vals)
+
+
+def test_bitunpack_ragged_length():
+    rng = np.random.default_rng(0)
+    n = 32 * 256 + 7 * 32  # not a multiple of the block
+    vals = rng.integers(0, 1 << 11, n).astype(np.uint32)
+    out = np.asarray(bitunpack(pack_bp32(vals, 11), 11, n_values=n))
+    assert np.array_equal(out, vals)
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.uint8, np.int16])
+def test_dequant_affine(dtype):
+    rng = np.random.default_rng(1)
+    info = np.iinfo(dtype)
+    q = rng.integers(info.min, info.max, (130, 70)).astype(dtype)
+    scale = rng.random(70).astype(np.float32) + 0.1
+    zero = rng.normal(size=70).astype(np.float32)
+    out = np.asarray(dequant(q, scale, zero, out_dtype=jnp.float32))
+    ref = np.asarray(dequant_ref(jnp.asarray(q), jnp.asarray(scale),
+                                 jnp.asarray(zero), jnp.float32))
+    assert np.allclose(out, ref, atol=1e-3)
+
+
+def test_dequant_bf16_bits():
+    import ml_dtypes
+    rng = np.random.default_rng(2)
+    f = rng.normal(size=(256, 128)).astype(np.float32)
+    u16 = f.astype(ml_dtypes.bfloat16).view(np.uint16)
+    out = np.asarray(dequant(u16, np.ones(128, np.float32),
+                             np.zeros(128, np.float32), out_dtype=jnp.float32))
+    assert np.allclose(out, f, atol=0.02)
+
+
+@pytest.mark.parametrize("shape,causal,window", [
+    ((2, 2, 256, 64), True, 0),
+    ((1, 2, 384, 128), True, 0),
+    ((1, 1, 256, 64), False, 0),
+    ((2, 1, 256, 64), True, 64),
+    ((1, 1, 200, 80), True, 0),       # ragged S and D (padding path)
+])
+def test_flash_attention(shape, causal, window):
+    rng = np.random.default_rng(0)
+    B, H, S, D = shape
+    q, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+               for _ in range(3))
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    assert float(jnp.abs(out - ref).max()) < 3e-5
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    shape = (1, 2, 256, 128)
+    q, k, v = (jnp.asarray(rng.normal(size=shape), jnp.bfloat16)
+               for _ in range(3))
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - ref.astype(jnp.float32)).max()) < 3e-2

@@ -1,0 +1,75 @@
+"""Property-based serving-cache tests: rolling windows, long decode runs, and
+cross-arch cache/pure-forward agreement under random schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as configs
+from repro.models import transformer as tf
+from repro.models import zoo
+from repro.models.transformer import Ctx, _rolling_pos
+
+RNG = jax.random.PRNGKey(0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 64))
+def test_rolling_pos_invariants(pos, W):
+    """Slot i holds the latest absolute position p <= pos with p % W == i."""
+    kv_pos = np.asarray(_rolling_pos(jnp.asarray(pos), W))
+    for i, p in enumerate(kv_pos):
+        assert p % W == i or p < 0
+        assert p <= pos
+        assert p + W > pos  # within the last W positions
+
+
+@pytest.mark.parametrize("arch", ["gemma3_12b", "recurrentgemma_9b",
+                                  "mixtral_8x22b"])
+def test_long_decode_past_window(arch):
+    """Decode 3x past the window; every step must match full forward."""
+    cfg = configs.get_smoke(arch).scaled(compute_dtype="float32",
+                                         capacity_factor=32.0, window=6)
+    m = zoo.build(cfg)
+    params = m.init(RNG)
+    B, P, total = 1, 4, 22
+    tok = jax.random.randint(RNG, (B, total), 0, cfg.vocab)
+
+    positions = jnp.arange(total, dtype=jnp.int32)
+    ctx = Ctx(cfg=cfg, dist=None, mode="prefill", positions=positions)
+    x = tf.embed_tokens(params, tok, cfg, jnp.float32)
+    x, _, _ = tf.forward(params, x, cfg, ctx)
+    ref = tf.logits_fn(params, x, cfg)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+
+    cache = m.init_cache(B, total, dtype=jnp.float32)
+    lg, cache = m.prefill(params, {"tokens": tok[:, :P]}, cache)
+    dec = jax.jit(m.decode_step)
+    for i in range(total - P - 1):
+        lg, cache = dec(params, cache, tok[:, P + i:P + i + 1])
+        err = float(jnp.abs(lg - ref[:, P + i]).max())
+        assert err < 2e-3 * scale + 1e-4, (arch, i, err)
+
+
+def test_prefill_longer_than_window_fills_rolling_buffer():
+    cfg = configs.get_smoke("mixtral_8x22b").scaled(
+        compute_dtype="float32", capacity_factor=32.0, window=4)
+    m = zoo.build(cfg)
+    params = m.init(RNG)
+    B, P = 1, 11   # prompt nearly 3x the window
+    tok = jax.random.randint(RNG, (B, P + 3), 0, cfg.vocab)
+    positions = jnp.arange(P + 3, dtype=jnp.int32)
+    ctx = Ctx(cfg=cfg, dist=None, mode="prefill", positions=positions)
+    x = tf.embed_tokens(params, tok, cfg, jnp.float32)
+    x, _, _ = tf.forward(params, x, cfg, ctx)
+    ref = tf.logits_fn(params, x, cfg)
+    cache = m.init_cache(B, P + 3, dtype=jnp.float32)
+    lg, cache = m.prefill(params, {"tokens": tok[:, :P]}, cache)
+    scale = float(jnp.abs(ref).max()) + 1e-6
+    assert float(jnp.abs(lg - ref[:, P - 1]).max()) < 2e-3 * scale + 1e-4
+    for i in range(2):
+        lg, cache = m.decode_step(params, cache, tok[:, P + i:P + i + 1])
+        err = float(jnp.abs(lg - ref[:, P + i]).max())
+        assert err < 2e-3 * scale + 1e-4, (i, err)
