@@ -9,7 +9,7 @@ import traceback
 def main() -> None:
     from . import (bench_cascade, bench_deletion, bench_metadata,
                    bench_multimodal, bench_projection, bench_quantization,
-                   bench_roofline, bench_sparse_delta)
+                   bench_roofline, bench_scan, bench_sparse_delta)
 
     rows: list[tuple[str, float, str]] = []
 
@@ -26,6 +26,7 @@ def main() -> None:
         ("multimodal (§2.5, Fig. 7)", bench_multimodal),
         ("cascade   (§2.6, Table 2)", bench_cascade),
         ("projection (§2.3, Table 1)", bench_projection),
+        ("scan      (zone maps / pushdown)", bench_scan),
         ("roofline  (dry-run artifacts)", bench_roofline),
     ]
     failures = 0

@@ -5,7 +5,8 @@ table projection), writer/multimodal (§2.5 quality-aware organization),
 deletion/merkle (§2.1 compliance), quantization (§2.4), sparse_delta (§2.2).
 """
 
-from .deletion import Compliance, DeleteStats, delete_rows, verify_deleted
+from .deletion import (Compliance, DeleteStats, delete_rows, delete_where,
+                       verify_deleted)
 from .encodings import (CostWeights, EncodeContext, choose_encoding,
                         decode_blob, encode_array, mask_blob)
 from .footer import ColKind, FooterView, PageType, Sec, read_footer
@@ -22,7 +23,8 @@ __all__ = [
     "CostWeights", "DeleteStats", "EncodeContext", "FooterView", "MediaStore",
     "MerkleTree", "MultimodalSample", "PageType", "QuantMode", "QuantSpec",
     "Sec", "affine_spec_for", "choose_encoding", "decode_blob", "delete_rows",
-    "dequantize", "encode_array", "mask_blob", "page_hash", "quality_sort",
+    "delete_where", "dequantize", "encode_array", "mask_blob", "page_hash",
+    "quality_sort",
     "quality_filtered_read", "quantize", "read_footer", "rejoin_dual_fp16",
     "suggest_spec", "verify_deleted", "write_multimodal_dataset",
 ]

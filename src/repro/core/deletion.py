@@ -86,6 +86,7 @@ def delete_rows(path: str, global_rows: np.ndarray,
     baseline_ops = tree.hash_ops
 
     dvs: dict[int, np.ndarray] = {}
+    touched_stats: set[tuple[int, int, int]] = set()  # (page, group, col)
 
     def dv_for(p: int) -> np.ndarray:
         if p not in dvs:
@@ -117,6 +118,7 @@ def delete_rows(path: str, global_rows: np.ndarray,
 
                     ptype = int(page_flags[p]) & PTYPE_MASK
                     was_compacted = bool(page_flags[p] & COMPACTED)
+                    touched_stats.add((p, group, col))
                     off, size = int(page_offset[p]), int(page_size[p])
                     f.seek(off)
                     payload = f.read(size)
@@ -154,7 +156,7 @@ def delete_rows(path: str, global_rows: np.ndarray,
                     dv[new_positions] = True
 
         new_footer = _rebuild_footer(fv, dvs, tree, page_flags, page_offset,
-                                     page_size)
+                                     page_size, touched_stats)
         f.seek(append_at)
         f.write(new_footer)
         f.write(struct.pack("<Q", len(new_footer)) + MAGIC)
@@ -175,7 +177,8 @@ def _compacts(ptype: int, payload: bytes) -> bool:
 
 def _rebuild_footer(fv: FooterView, dvs: dict[int, np.ndarray],
                     tree: MerkleTree, page_flags: np.ndarray,
-                    page_offset: np.ndarray, page_size: np.ndarray) -> bytes:
+                    page_offset: np.ndarray, page_size: np.ndarray,
+                    touched_stats: set[tuple[int, int, int]] = frozenset()) -> bytes:
     fb = FooterBuilder()
     for sid in list(Sec):
         if fv.has(sid):
@@ -188,6 +191,20 @@ def _rebuild_footer(fv: FooterView, dvs: dict[int, np.ndarray],
     fb.put(Sec.PAGE_FLAGS, page_flags)
     fb.put(Sec.PAGE_OFFSET, page_offset)
     fb.put(Sec.PAGE_SIZE, page_size)
+
+    # L2 physical masking writes zeros into touched pages without re-reading
+    # survivors, so zone maps are *widened* to include 0 rather than
+    # recomputed — pruning stays sound, only slightly less selective.
+    if touched_stats and fv.has_stats:
+        from ..scan.stats import STAT_DTYPE, widen_to_zero
+        pstats = np.frombuffer(bytes(fv.raw(Sec.PAGE_STATS)), STAT_DTYPE).copy()
+        cstats = np.frombuffer(bytes(fv.raw(Sec.CHUNK_STATS)), STAT_DTYPE).copy()
+        n_cols = fv.n_cols
+        for p, g, c in touched_stats:
+            widen_to_zero(pstats[p])
+            widen_to_zero(cstats[g * n_cols + c])
+        fb.put(Sec.PAGE_STATS, pstats)
+        fb.put(Sec.CHUNK_STATS, cstats)
 
     n_pages = fv.n_pages
     dv_off = fv.arr(Sec.DV_OFFSET, np.uint64).copy()
@@ -214,6 +231,24 @@ def _rebuild_footer(fv: FooterView, dvs: dict[int, np.ndarray],
     fb.put(Sec.DV_SIZE, dv_size)
     fb.put(Sec.DV_DATA, b"".join(blobs))
     return fb.build()
+
+
+def delete_where(path: str, predicate,
+                 level: Compliance = Compliance.LEVEL2) -> DeleteStats:
+    """Predicate-based delete: erase every row matching a ``repro.scan``
+    predicate (e.g. ``C("user_id") == victim``).
+
+    Victim rows are located through the pruning scanner, so on files with
+    zone maps only the row groups whose statistics admit a match are read —
+    a compliance delete of one user touches a handful of groups instead of
+    decoding the whole column."""
+    from .reader import BullionReader
+
+    with BullionReader(path) as r:
+        rows = r.scanner.find_rows(predicate, drop_deleted=False)
+    if len(rows) == 0:
+        return DeleteStats()
+    return delete_rows(path, rows, level)
 
 
 def verify_deleted(path: str, column: str, forbidden_values) -> dict:

@@ -3,15 +3,24 @@
 A string/binary column is physically (offsets:int64[n+1], data:uint8[...]).
 `encode_strings` cascades the offsets like any integer column and picks
 between FSST-lite and chunked-zstd for the data bytes.
+
+``zstandard`` is an optional dependency: when missing, ``RawBytes`` falls
+back to stdlib ``zlib`` on the write path. The codec is recorded in the blob
+header, so files written with either codec decode wherever that codec exists.
 """
 
 from __future__ import annotations
 
 import struct
+import zlib
 from collections import Counter
 
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - environment-dependent
+    zstd = None
 
 from .base import EncodeContext, frame, register, unframe, Encoding
 from .numeric import _cat, _split2
@@ -98,24 +107,42 @@ class FsstLite(Encoding):
 
 
 class RawBytes(Encoding):
-    """bytes payload, zstd-compressed when profitable."""
+    """bytes payload, compressed when profitable.
+
+    Codec byte in the header: 0 = stored, 1 = zstd, 2 = zlib. zstd is used
+    when the optional ``zstandard`` module is importable; otherwise the write
+    path degrades to zlib and zstd-coded blobs raise a clear error on read.
+    """
 
     eid, name = 16, "raw_bytes"
+    STORED, ZSTD, ZLIB = 0, 1, 2
 
     def applicable(self, arr, ctx):
         return isinstance(arr, (bytes, bytearray, memoryview))
 
     def encode(self, data: bytes, ctx: EncodeContext):
         data = bytes(data)
-        comp = zstd.ZstdCompressor(level=3).compress(data)
-        use = comp if len(comp) < len(data) else data
-        header = struct.pack("<QB", len(data), int(use is comp))
+        if zstd is not None:
+            comp, codec = zstd.ZstdCompressor(level=3).compress(data), self.ZSTD
+        else:
+            comp, codec = zlib.compress(data, 6), self.ZLIB
+        use, codec = (comp, codec) if len(comp) < len(data) else (data, self.STORED)
+        header = struct.pack("<QB", len(data), codec)
         return frame(self.eid, header, use)
 
     def decode(self, header, payload) -> np.ndarray:
-        n, compressed = struct.unpack_from("<QB", header)
-        raw = zstd.ZstdDecompressor().decompress(bytes(payload), max_output_size=max(n, 1)) \
-            if compressed else bytes(payload)
+        n, codec = struct.unpack_from("<QB", header)
+        if codec == self.ZSTD:
+            if zstd is None:
+                raise RuntimeError(
+                    "blob is zstd-compressed but the optional 'zstandard' "
+                    "module is not installed")
+            raw = zstd.ZstdDecompressor().decompress(bytes(payload),
+                                                     max_output_size=max(n, 1))
+        elif codec == self.ZLIB:
+            raw = zlib.decompress(bytes(payload))
+        else:
+            raw = bytes(payload)
         return np.frombuffer(raw, np.uint8, count=n)
 
 

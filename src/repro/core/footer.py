@@ -29,9 +29,16 @@ MAGIC = b"BULLION1"
 _DIR_ENTRY = struct.Struct("<HQQ")
 _TAIL = struct.Struct("<Q8s")
 
+# Format versions (META word 7). v0 files predate write-time statistics and
+# remain fully readable: stats sections are simply absent and every scan
+# degrades to the unpruned path.
+FORMAT_V0 = 0             # seed format: no statistics sections
+FORMAT_V1 = 1             # + PAGE_STATS / CHUNK_STATS zone maps
+FORMAT_VERSION = FORMAT_V1
+
 
 class Sec(IntEnum):
-    META = 0              # u64[8]: num_rows, n_cols, n_groups, n_pages, rows_per_group, compliance, file_checksum, flags
+    META = 0              # u64[8]: num_rows, n_cols, n_groups, n_pages, rows_per_group, compliance, file_checksum, format_version
     NAMES_DATA = 1        # raw bytes of all column names
     NAMES_OFFSETS = 2     # u32[n_cols + 1]
     NAME_HASH_SORTED = 3  # u64[n_cols]
@@ -52,6 +59,8 @@ class Sec(IntEnum):
     GROUP_CHECKSUM = 18   # u64[n_groups]
     QUANT_META = 19       # packed per-column quantization params
     PROPS = 20            # optional key\0value\0... (cold; parsed on demand)
+    PAGE_STATS = 21       # STAT_DTYPE[n_pages] zone maps (v1+, see scan.stats)
+    CHUNK_STATS = 22      # STAT_DTYPE[n_groups * n_cols] per-chunk zone maps (v1+)
 
 
 class PageType(IntEnum):
@@ -143,6 +152,28 @@ class FooterView:
 
     @property
     def file_checksum(self) -> int: return int(self.meta[6])
+
+    @property
+    def format_version(self) -> int: return int(self.meta[7])
+
+    # -- write-time statistics (v1+; absent on v0 files) ----------------------
+    @property
+    def has_stats(self) -> bool:
+        return self.has(Sec.CHUNK_STATS)
+
+    def page_stats(self) -> np.ndarray | None:
+        """STAT_DTYPE[n_pages] view, or None on stat-less (v0) files."""
+        if not self.has(Sec.PAGE_STATS):
+            return None
+        from ..scan.stats import STAT_DTYPE
+        return self.arr(Sec.PAGE_STATS, STAT_DTYPE)
+
+    def chunk_stats(self) -> np.ndarray | None:
+        """STAT_DTYPE[n_groups * n_cols] view (row-group zone maps), or None."""
+        if not self.has(Sec.CHUNK_STATS):
+            return None
+        from ..scan.stats import STAT_DTYPE
+        return self.arr(Sec.CHUNK_STATS, STAT_DTYPE)
 
     def column_index(self, name: str) -> int:
         """Binary map scan (paper's term): O(log n_cols), no parsing."""

@@ -5,6 +5,10 @@ indices -> byte ranges from the offsets arrays -> targeted preads.  Adjacent
 page ranges are coalesced into single I/O operations (the Alpha-style
 optimization the paper cites) because ML projections read many columns of the
 same row group.
+
+Predicated reads go through the statistics-driven scan subsystem
+(``repro.scan``): zone maps persisted by the writer prune whole row groups
+before any data pread, and only surviving groups are decoded and filtered.
 """
 
 from __future__ import annotations
@@ -40,6 +44,7 @@ class BullionReader:
                              bytes_read=len(self.footer._buf))
         self.stats.metadata_seconds = time.perf_counter() - t0
         self._f = open(path, "rb")
+        self._scanner = None
 
     def close(self) -> None:
         self._f.close()
@@ -63,6 +68,14 @@ class BullionReader:
         from .quantization import QUANT_DTYPE
         recs = self.footer.arr(Sec.QUANT_META, QUANT_DTYPE)
         return QuantSpec.from_record(recs[col])
+
+    @property
+    def scanner(self):
+        """Statistics-driven pruning scanner (lazy; see repro.scan)."""
+        if self._scanner is None:
+            from ..scan.scanner import Scanner
+            self._scanner = Scanner(self)
+        return self._scanner
 
     # -- I/O ----------------------------------------------------------------------
     def _pread(self, offset: int, size: int) -> bytes:
@@ -96,8 +109,21 @@ class BullionReader:
 
     # -- projection ----------------------------------------------------------------
     def project(self, names: Sequence[str], groups: Optional[Sequence[int]] = None,
-                drop_deleted: bool = True, dequant: bool = True) -> Iterator[dict]:
-        """Yield one dict per row group with decoded columns."""
+                drop_deleted: bool = True, dequant: bool = True,
+                predicate=None) -> Iterator[dict]:
+        """Yield one dict per row group with decoded columns.
+
+        With ``predicate`` (a ``repro.scan`` Predicate), row groups the zone
+        maps prove empty are skipped without any data pread and the yielded
+        tables contain only the matching rows (one dict per surviving group
+        with >= 1 match)."""
+        if predicate is not None:
+            for batch in self.scanner.scan(predicate, columns=list(names),
+                                           groups=groups,
+                                           drop_deleted=drop_deleted,
+                                           dequant=dequant):
+                yield batch.table
+            return
         fv = self.footer
         cols = [fv.column_index(n) for n in names]
         kinds = fv.arr(Sec.COL_KIND, np.uint8)
@@ -146,10 +172,21 @@ class BullionReader:
         return out
 
     def find_rows(self, column: str, values) -> np.ndarray:
-        """Predicate helper: global row ids where column ∈ values."""
-        data = self.read_column(column, drop_deleted=False, dequant=False)
-        mask = np.isin(np.asarray(data), np.asarray(values))
-        return np.flatnonzero(mask)
+        """Predicate helper: global row ids (raw row space) where
+        column ∈ values.
+
+        Rewritten on the pruning scanner: on files with zone maps
+        (format v1+) only the row groups whose statistics admit one of the
+        values are read; v0 files fall back to the full-column scan.
+        String columns keep the legacy full-decode membership probe
+        (predicates cover scalar columns only)."""
+        from ..scan.predicate import In
+        kinds = self.footer.arr(Sec.COL_KIND, np.uint8)
+        if kinds[self.footer.column_index(column)] not in \
+                (int(ColKind.SCALAR), int(ColKind.MEDIA_REF)):
+            data = self.read_column(column, drop_deleted=False, dequant=False)
+            return np.flatnonzero(np.isin(np.asarray(data), np.asarray(values)))
+        return self.scanner.find_rows(In(column, values))
 
 
 def _concat(parts):

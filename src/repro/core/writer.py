@@ -17,9 +17,11 @@ import numpy as np
 from . import pages
 from .encodings import EncodeContext
 from .encodings.base import dtype_code
-from .footer import ColKind, FooterBuilder, MAGIC, PageType, Sec, name_hash
+from .footer import (ColKind, FooterBuilder, FORMAT_V0, FORMAT_VERSION, MAGIC,
+                     PageType, Sec, name_hash)
 from .merkle import MerkleTree, page_hash
-from .quantization import QUANT_DTYPE, QuantMode, QuantSpec, quantize, storage_dtype
+from .quantization import (QUANT_DTYPE, QuantMode, QuantSpec, dequantize,
+                           quantize, storage_dtype)
 
 
 @dataclass
@@ -72,7 +74,8 @@ class BullionWriter:
                  sort_udf: Optional[SortUDF] = None,
                  column_order_udf: Optional[ColumnOrderUDF] = None,
                  encode_ctx: Optional[EncodeContext] = None,
-                 props: Optional[dict[str, str]] = None):
+                 props: Optional[dict[str, str]] = None,
+                 collect_stats: bool = True):
         self.path = path
         self.schema = list(schema)
         self.by_name = {s.name: s for s in self.schema}
@@ -90,6 +93,9 @@ class BullionWriter:
                 "constant", "rle", "dictionary", "for", "fixed_bit_width",
                 "varint", "mainly_constant", "trivial"))
         self.props = props or {}
+        # write-time zone-map statistics (scan subsystem). ``collect_stats=
+        # False`` writes a v0 (stat-less) file — the backward-compat target.
+        self.collect_stats = collect_stats
         self._buffers: dict[str, list] = {s.name: [] for s in self.schema}
         self._n_rows = 0
 
@@ -140,6 +146,8 @@ class BullionWriter:
 
         page_offset, page_size, page_rows, page_cksum, page_flags = [], [], [], [], []
         rows_per_group_arr = []
+        page_stat_recs: list = []               # physical page order
+        chunk_stat_recs: dict[tuple[int, int], list] = {}
 
         # schema order is the *logical* order; pages are laid out in `layout`
         # order inside each group. chunk_page_start is indexed logically, so
@@ -156,7 +164,7 @@ class BullionWriter:
                     spec = self.by_name[name]
                     data = table[name]
                     chunk = data[lo:hi]
-                    blob, ptype = self._build_page(spec, chunk)
+                    blob, ptype, stored = self._build_page(spec, chunk)
                     start_page = len(page_offset)
                     page_offset.append(f.tell())
                     page_size.append(len(blob))
@@ -165,6 +173,11 @@ class BullionWriter:
                     page_flags.append(int(ptype))
                     f.write(blob)
                     chunk_ranges[(g, logical_idx[name])] = (start_page, len(page_offset))
+                    if self.collect_stats:
+                        rec = self._page_stats_record(spec, chunk, stored)
+                        page_stat_recs.append(rec)
+                        chunk_stat_recs.setdefault(
+                            (g, logical_idx[name]), []).append(rec)
 
             # page index per logical (group, col) chunk; with §2.5 layout
             # reordering a group's pages aren't in logical order.
@@ -184,7 +197,20 @@ class BullionWriter:
             meta[4] = self.rows_per_group
             meta[5] = self.compliance
             meta[6] = tree.root
+            meta[7] = FORMAT_VERSION if self.collect_stats else FORMAT_V0
             fb.put(Sec.META, meta)
+
+            if self.collect_stats:
+                from ..scan.stats import STAT_DTYPE, merge_records
+                page_stats = np.zeros(n_pages, STAT_DTYPE)
+                for i, rec in enumerate(page_stat_recs):
+                    page_stats[i] = rec
+                chunk_stats = np.zeros(n_groups * n_cols, STAT_DTYPE)
+                for (g, c), recs in chunk_stat_recs.items():
+                    chunk_stats[g * n_cols + c] = \
+                        recs[0] if len(recs) == 1 else merge_records(recs)
+                fb.put(Sec.PAGE_STATS, page_stats)
+                fb.put(Sec.CHUNK_STATS, chunk_stats)
 
             names = [s.name for s in self.schema]
             name_bytes = b"".join(n.encode() for n in names)
@@ -232,19 +258,36 @@ class BullionWriter:
         return {"rows": n_rows, "groups": n_groups, "pages": n_pages,
                 "file_checksum": tree.root}
 
+    # -- write-time statistics ----------------------------------------------------
+    def _page_stats_record(self, spec: ColumnSpec, chunk, stored):
+        """Zone-map record over the values a reader will decode: quantized
+        columns use the already-quantized page array, dequantized back, so
+        the recorded range matches ``dequant=True`` reads exactly."""
+        from ..scan.stats import stats_record
+        if spec.kind == ColKind.SCALAR:
+            if spec.quant.mode != QuantMode.NONE:
+                return stats_record(np.asarray(dequantize(stored, spec.quant)))
+            return stats_record(np.asarray(chunk))
+        if spec.kind == ColKind.MEDIA_REF:
+            return stats_record(np.asarray(chunk, np.uint64))
+        return stats_record(list(chunk))
+
     # -- page building -----------------------------------------------------------
-    def _build_page(self, spec: ColumnSpec, chunk) -> tuple[bytes, PageType]:
+    def _build_page(self, spec: ColumnSpec, chunk) -> tuple[bytes, PageType, object]:
+        """Returns (payload, page type, stored scalar array or None)."""
         if spec.kind == ColKind.SCALAR:
             arr = np.asarray(chunk)
             if spec.quant.mode != QuantMode.NONE:
                 arr = quantize(arr, spec.quant)
-            return pages.build_scalar_page(arr, self.ctx), PageType.SCALAR
+            return pages.build_scalar_page(arr, self.ctx), PageType.SCALAR, arr
         if spec.kind == ColKind.MEDIA_REF:
-            return pages.build_scalar_page(np.asarray(chunk, np.uint64), self.ctx), \
-                PageType.MEDIA_REF
+            arr = np.asarray(chunk, np.uint64)
+            return pages.build_scalar_page(arr, self.ctx), PageType.MEDIA_REF, arr
         if spec.kind == ColKind.LIST:
-            return pages.build_list_page(list(chunk), self.ctx,
-                                         use_sparse_delta=spec.sparse_delta)
+            blob, ptype = pages.build_list_page(list(chunk), self.ctx,
+                                                use_sparse_delta=spec.sparse_delta)
+            return blob, ptype, None
         if spec.kind == ColKind.STRING:
-            return pages.build_string_page(list(chunk), self.ctx), PageType.STRING
+            return pages.build_string_page(list(chunk), self.ctx), \
+                PageType.STRING, None
         raise ValueError(spec.kind)

@@ -1,7 +1,10 @@
 """Bullion-backed training input pipeline.
 
 Wide-table projection (§2.3) is the read primitive: the loader touches only
-the projected columns' pages. Work is split by row group across data-parallel
+the projected columns' pages. With a ``predicate`` (repro.scan), the pruning
+scanner additionally drops whole row groups the zone maps prove empty — e.g.
+quality-threshold training reads (§2.5) on a quality-presorted file touch
+only the leading groups. Work is split by row group across data-parallel
 ranks (disjoint, contiguous ranges — the quality-presorted layout keeps each
 rank's reads sequential), host decode overlaps device compute via a prefetch
 thread, and the cursor (epoch, group index) is checkpointable for
@@ -30,7 +33,8 @@ class BullionLoader:
     def __init__(self, path: str, *, batch_size: int, seq_len: int,
                  rank: int = 0, world: int = 1, prefetch: int = 2,
                  column: str = "tokens", seed: int = 0,
-                 state: Optional[LoaderState] = None):
+                 state: Optional[LoaderState] = None,
+                 predicate=None):
         self.path = path
         self.batch_size = batch_size
         self.seq_len = seq_len
@@ -39,6 +43,13 @@ class BullionLoader:
         self.state = state or LoaderState()
         self.reader = BullionReader(path)
         self.n_groups = self.reader.footer.n_groups
+        self.predicate = predicate
+        if predicate is not None:
+            # zone-map pruning is static per file: plan once, stream forever
+            plan = self.reader.scanner.plan(predicate, columns=[column])
+            self._groups = plan.groups
+        else:
+            self._groups = list(range(self.n_groups))
         self._tokens_per_batch = batch_size * (seq_len + 1)
         self._buf = np.zeros(0, np.int32)
         self._queue: queue.Queue = queue.Queue(maxsize=prefetch)
@@ -47,16 +58,36 @@ class BullionLoader:
 
     # -- group scheduling --------------------------------------------------------
     def _my_groups(self, epoch: int) -> list[int]:
-        groups = list(range(self.n_groups))
-        return [g for i, g in enumerate(groups) if i % self.world == self.rank]
+        return [g for i, g in enumerate(self._groups)
+                if i % self.world == self.rank]
 
     def _read_group(self, g: int) -> np.ndarray:
-        tbl = next(iter(self.reader.project([self.column], groups=[g])))
-        docs = tbl[self.column]
+        if self.predicate is not None:
+            docs: list | np.ndarray = []
+            for batch in self.reader.scanner.scan(self.predicate,
+                                                  columns=[self.column],
+                                                  groups=[g]):
+                docs = batch.table[self.column]
+            if len(docs) == 0:
+                return np.zeros(0, np.int32)
+        else:
+            tbl = next(iter(self.reader.project([self.column], groups=[g])))
+            docs = tbl[self.column]
         return np.concatenate([np.asarray(d, np.int32) for d in docs]) \
             if isinstance(docs, list) else np.asarray(docs, np.int32)
 
     # -- iteration ------------------------------------------------------------------
+    def _put(self, item) -> bool:
+        """Bounded put that never deadlocks against close(): re-checks the
+        stop flag instead of blocking forever on a full queue."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _produce(self):
         try:
             while not self._stop.is_set():
@@ -70,14 +101,13 @@ class BullionLoader:
                             .reshape(self.batch_size, self.seq_len + 1)
                         self._buf = self._buf[self._tokens_per_batch:]
                         cursor = LoaderState(self.state.epoch, g + 1)
-                        self._queue.put((batch.copy(), cursor))
-                        if self._stop.is_set():
+                        if not self._put((batch.copy(), cursor)):
                             return
                     self.state.group = g + 1
                 self.state.epoch += 1
                 self.state.group = 0
         except Exception as e:  # surface in consumer
-            self._queue.put(e)
+            self._put(e)
 
     def __iter__(self) -> Iterator[tuple[np.ndarray, LoaderState]]:
         if self._thread is None:
@@ -90,7 +120,21 @@ class BullionLoader:
             yield item
 
     def close(self):
+        # Order matters: signal stop first, then drain while joining — the
+        # producer only blocks in bounded 0.1 s put() attempts, so draining
+        # plus a timed join always converges (no full-queue deadlock).
         self._stop.set()
+        if self._thread is not None:
+            deadline = 20.0
+            while self._thread.is_alive() and deadline > 0:
+                try:
+                    while True:
+                        self._queue.get_nowait()
+                except queue.Empty:
+                    pass
+                self._thread.join(timeout=0.2)
+                deadline -= 0.2
+            self._thread = None
         try:
             while True:
                 self._queue.get_nowait()

@@ -3,6 +3,8 @@
   bitunpack       — fixed-bit-width integer unpack (C6 FixedBitWidth/FOR
                     decode; the paper's SIMDFastBP128 analogue on the VPU)
   dequant         — fused per-feature dequantize + cast (C4 read path)
+  filter          — conjunctive range filter for predicate pushdown (the
+                    scan subsystem's batch row-survivor mask)
   flash_attention — blocked online-softmax attention (beyond-paper training
                     perf; the §Perf answer to vanilla attention's HBM traffic)
 

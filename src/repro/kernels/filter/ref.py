@@ -1,0 +1,20 @@
+"""Pure-numpy oracle for the conjunctive range-filter kernel.
+
+The kernel form of a pushed-down predicate is a per-column closed interval
+(``scan.predicate.conjunctive_ranges``): a row survives iff every filter
+column lies inside its interval. NaNs never survive (they fail both bound
+checks), matching NumPy comparison semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def range_mask_ref(cols: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """cols: f32[C, N]; lo, hi: f32[C] -> bool[N] conjunctive in-range mask."""
+    cols = np.asarray(cols, np.float32)
+    lo = np.asarray(lo, np.float32).reshape(-1, 1)
+    hi = np.asarray(hi, np.float32).reshape(-1, 1)
+    ok = (cols >= lo) & (cols <= hi)
+    return ok.all(axis=0)

@@ -232,6 +232,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, (list, tuple)):  # older jaxlib: one dict per device
+            xla_cost = xla_cost[0] if xla_cost else {}
         try:
             mem = compiled.memory_analysis()
             mem_rec = {k: int(getattr(mem, k)) for k in

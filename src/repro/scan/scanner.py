@@ -1,0 +1,241 @@
+"""Statistics-driven pruning scanner.
+
+The scan pipeline per row group:
+
+  1. **Prune** — intersect the predicate with the group's chunk zone maps
+     (``Sec.CHUNK_STATS``). Groups that provably contain no matching row are
+     skipped before any data pread; on stat-less (v0) files every group
+     survives and the scan degrades to a plain filtered read.
+  2. **Filter** — decode only the *predicate* columns of surviving groups and
+     evaluate the predicate. Conjunctive range predicates over float32
+     columns dispatch to the Pallas batch filter kernel
+     (``repro.kernels.filter``); everything else takes the vectorized NumPy
+     path. Groups where no row survives never read their payload columns.
+  3. **Project** — decode the requested payload columns and gather the
+     surviving rows.
+
+Row ids are reported in the file's *raw* row space (deletion vectors do not
+renumber rows), which is what ``core.deletion`` consumes for predicate-based
+deletes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Iterator, Optional, Sequence
+
+import numpy as np
+
+from ..core.footer import Sec
+from .predicate import Predicate, conjunctive_ranges, evaluate
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from ..core.reader import BullionReader
+
+
+@dataclass
+class ScanPlan:
+    """Result of zone-map pruning, before any data I/O."""
+
+    groups: list[int]                     # surviving row groups, in scan order
+    pruned_groups: list[int]              # provably-empty row groups
+    pages_pruned: int = 0                 # page reads avoided by pruning
+    pages_total: int = 0                  # page reads a full scan would issue
+
+    @property
+    def selectivity_bound(self) -> float:
+        total = len(self.groups) + len(self.pruned_groups)
+        return len(self.groups) / total if total else 1.0
+
+
+@dataclass
+class ScanBatch:
+    """Matching rows of one row group."""
+
+    group: int
+    row_ids: np.ndarray                   # global ids, raw row space
+    table: dict = field(default_factory=dict)
+
+
+def _f32_shrink(lo: float, hi: float) -> tuple[np.float32, np.float32]:
+    """Tightest float32 interval inside the float64 one.
+
+    Exact for float32 column data: a float32 x satisfies lo <= x <= hi iff
+    it satisfies the shrunk float32 bounds.
+    """
+    lo32, hi32 = np.float32(lo), np.float32(hi)
+    if np.float64(lo32) < lo:
+        lo32 = np.nextafter(lo32, np.float32(np.inf), dtype=np.float32)
+    if np.float64(hi32) > hi:
+        hi32 = np.nextafter(hi32, np.float32(-np.inf), dtype=np.float32)
+    return lo32, hi32
+
+
+class Scanner:
+    def __init__(self, reader: "BullionReader"):
+        self.reader = reader
+        self.fv = reader.footer
+
+    # -- zone-map access --------------------------------------------------------
+    def _group_stats(self, group: int, cols: Sequence[str]) -> dict:
+        """Map column name -> chunk STAT record (or None on v0 files)."""
+        chunk = self.fv.chunk_stats()
+        if chunk is None:
+            return {name: None for name in cols}
+        n_cols = self.fv.n_cols
+        return {name: chunk[group * n_cols + self.fv.column_index(name)]
+                for name in cols}
+
+    def _pages_for(self, group: int, cols: Sequence[str]) -> list[int]:
+        out: list[int] = []
+        for name in cols:
+            s, e = self.fv.chunk_pages(group, self.fv.column_index(name))
+            out.extend(range(s, e))
+        return out
+
+    # -- planning ---------------------------------------------------------------
+    def plan(self, pred: Predicate, columns: Sequence[str] = (),
+             groups: Optional[Sequence[int]] = None) -> ScanPlan:
+        """Zone-map pruning: decide which row groups can possibly match."""
+        pred_cols = sorted(pred.columns())
+        read_cols = list(dict.fromkeys([*pred_cols, *columns]))
+        candidates = list(groups) if groups is not None \
+            else list(range(self.fv.n_groups))
+        plan = ScanPlan(groups=[], pruned_groups=[])
+        for g in candidates:
+            n_pages = len(self._pages_for(g, read_cols))
+            plan.pages_total += n_pages
+            if pred.maybe_any(self._group_stats(g, pred_cols)):
+                plan.groups.append(g)
+            else:
+                plan.pruned_groups.append(g)
+                plan.pages_pruned += n_pages
+        return plan
+
+    # -- filtering --------------------------------------------------------------
+    def _group_keep(self, group: int, col: int = 0) -> Optional[np.ndarray]:
+        """Raw-row keep mask from deletion vectors (None = nothing deleted)."""
+        s, e = self.fv.chunk_pages(group, col)
+        page_rows = self.fv.arr(Sec.PAGE_ROWS, np.uint32)
+        parts, any_dv = [], False
+        for p in range(s, e):
+            dv = self.fv.deletion_vector(p)
+            if dv is None:
+                parts.append(np.ones(int(page_rows[p]), bool))
+            else:
+                parts.append(~dv)
+                any_dv = True
+        return np.concatenate(parts) if any_dv else None
+
+    def _expand_raw(self, group: int, name: str, values):
+        """Re-align a drop_deleted=False column to the raw row space.
+
+        Compact-deleted pages (§2.1 RLE rule) physically remove rows, so the
+        decoded array is shorter than the group's raw row count and indices
+        would otherwise shift. Erased positions read as 0 — the same value
+        in-place masking writes — and zone maps of every touched page were
+        already widened to include 0, so pruning stays consistent."""
+        if not isinstance(values, np.ndarray):
+            return values
+        rows = int(self.fv.arr(Sec.ROWS_PER_GROUP, np.uint32)[group])
+        if len(values) >= rows:
+            return values[:rows]
+        keep = self._group_keep(group, self.fv.column_index(name))
+        out = np.zeros(rows, values.dtype)
+        out[np.flatnonzero(keep)] = values
+        return out
+
+    def _eval(self, pred: Predicate, tbl: dict,
+              use_kernel: Optional[bool]) -> np.ndarray:
+        """Predicate -> row mask; Pallas kernel when the predicate compiles
+        to conjunctive ranges over float32 columns (exact there), NumPy
+        otherwise."""
+        ranges = conjunctive_ranges(pred)
+        kernel_ok = ranges is not None and all(
+            isinstance(tbl[c], np.ndarray) and tbl[c].dtype == np.float32
+            for c in ranges)
+        if use_kernel and not kernel_ok:
+            raise ValueError(
+                "kernel filter path requires a conjunctive range predicate "
+                "over float32 columns")
+        if use_kernel is None:
+            use_kernel = kernel_ok
+        if not use_kernel:
+            return evaluate(pred, tbl)
+        from ..kernels.filter import range_mask
+        names = list(ranges)
+        bounds = [_f32_shrink(*ranges[c]) for c in names]
+        cols = np.stack([np.asarray(tbl[c], np.float32) for c in names])
+        return range_mask(cols,
+                          np.asarray([b[0] for b in bounds], np.float32),
+                          np.asarray([b[1] for b in bounds], np.float32))
+
+    # -- scanning ---------------------------------------------------------------
+    def scan(self, pred: Predicate, columns: Sequence[str] = (),
+             groups: Optional[Sequence[int]] = None, *,
+             drop_deleted: bool = True, dequant: bool = True,
+             use_kernel: Optional[bool] = None) -> Iterator[ScanBatch]:
+        """Yield matching rows per surviving group.
+
+        ``columns`` are the payload columns materialized in each batch (the
+        predicate's own columns are always available and included when
+        requested). Payload pages are only read for groups where at least one
+        row survived the filter — the second half of the I/O win.
+        """
+        pred_cols = sorted(pred.columns())
+        # predicate columns are always evaluated in the dequantized (logical)
+        # domain — the domain the zone maps describe; the caller's ``dequant``
+        # flag governs only the materialized payload. When the caller wants
+        # raw (dequant=False) values of a predicate column, it is re-read in
+        # the payload pass rather than served from the evaluation copy.
+        reuse = set(pred_cols) if dequant else set()
+        payload = [c for c in columns if c not in reuse]
+        plan = self.plan(pred, columns, groups)
+        rpg = self.fv.arr(Sec.ROWS_PER_GROUP, np.uint32).astype(np.int64)
+        bounds = np.concatenate([[0], np.cumsum(rpg)])
+        for g in plan.groups:
+            (tbl,) = self.reader.project(pred_cols, groups=[g],
+                                         drop_deleted=drop_deleted,
+                                         dequant=True)
+            if not drop_deleted:
+                # compact-deleted pages shrink the decoded array; re-align
+                # every predicate column to the raw row space first
+                tbl = {name: self._expand_raw(g, name, vals)
+                       for name, vals in tbl.items()}
+            mask = self._eval(pred, tbl, use_kernel)
+            if not mask.any():
+                continue
+            local = np.flatnonzero(mask)
+            if drop_deleted:
+                keep = self._group_keep(g)
+                raw_local = local if keep is None \
+                    else np.flatnonzero(keep)[local]
+            else:
+                raw_local = local
+            batch = ScanBatch(group=g, row_ids=bounds[g] + raw_local)
+            for name in columns:
+                if name in reuse:
+                    batch.table[name] = _take(tbl[name], local)
+            if payload:
+                (ptbl,) = self.reader.project(payload, groups=[g],
+                                              drop_deleted=drop_deleted,
+                                              dequant=dequant)
+                for name in payload:
+                    vals = ptbl[name] if drop_deleted \
+                        else self._expand_raw(g, name, ptbl[name])
+                    batch.table[name] = _take(vals, local)
+            yield batch
+
+    def find_rows(self, pred: Predicate, *, drop_deleted: bool = False,
+                  use_kernel: Optional[bool] = None) -> np.ndarray:
+        """Global row ids (raw row space) whose rows satisfy ``pred``."""
+        parts = [b.row_ids for b in self.scan(pred, drop_deleted=drop_deleted,
+                                              use_kernel=use_kernel)]
+        return np.concatenate(parts) if parts \
+            else np.zeros(0, np.int64)
+
+
+def _take(values, idx: np.ndarray):
+    if isinstance(values, np.ndarray):
+        return values[idx]
+    return [values[i] for i in idx]

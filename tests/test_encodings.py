@@ -30,7 +30,11 @@ def int_arrays(draw):
         arr = np.full(n, int(rng.integers(0, 1000)))
     else:
         arr = np.sort(rng.integers(0, 10**6, n))
-    return np.clip(arr, info.min, info.max).astype(dtype)
+    # clip bounds must be representable in arr's dtype (int64/uint64), not
+    # just the target dtype — np.clip(int64_arr, 0, uint64_max) overflows
+    ainfo = np.iinfo(arr.dtype)
+    return np.clip(arr, max(info.min, ainfo.min),
+                   min(info.max, ainfo.max)).astype(dtype)
 
 
 @st.composite

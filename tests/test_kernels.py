@@ -7,6 +7,7 @@ import pytest
 
 from repro.kernels.bitunpack import bitunpack, bitunpack_ref, pack_bp32
 from repro.kernels.dequant import dequant, dequant_ref
+from repro.kernels.filter import range_mask, range_mask_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
 
 
@@ -28,6 +29,28 @@ def test_bitunpack_ragged_length():
     vals = rng.integers(0, 1 << 11, n).astype(np.uint32)
     out = np.asarray(bitunpack(pack_bp32(vals, 11), 11, n_values=n))
     assert np.array_equal(out, vals)
+
+
+@pytest.mark.parametrize("n_cols,n", [(1, 2048), (3, 4096), (5, 2048 + 777)])
+def test_filter_range_mask(n_cols, n):
+    rng = np.random.default_rng(n_cols)
+    cols = rng.normal(size=(n_cols, n)).astype(np.float32)
+    lo = rng.normal(size=n_cols).astype(np.float32) - 0.5
+    hi = lo + rng.random(n_cols).astype(np.float32) * 2
+    out = range_mask(cols, lo, hi)
+    assert np.array_equal(out, range_mask_ref(cols, lo, hi))
+    assert out.shape == (n,)
+
+
+def test_filter_range_mask_nan_and_inf():
+    cols = np.array([[0.0, np.nan, 1.0, -np.inf, np.inf, 0.5]], np.float32)
+    lo = np.array([-np.inf], np.float32)
+    hi = np.array([np.inf], np.float32)
+    out = range_mask(cols, lo, hi)
+    assert np.array_equal(out, [True, False, True, True, True, True])  # NaN fails
+    out2 = range_mask(cols, np.array([0.4], np.float32),
+                      np.array([0.6], np.float32))
+    assert np.array_equal(out2, [False, False, False, False, False, True])
 
 
 @pytest.mark.parametrize("dtype", [np.int8, np.uint8, np.int16])
