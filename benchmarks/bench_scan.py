@@ -1,11 +1,12 @@
-"""Scan subsystem benchmark: zone-map pruning vs full-column scans.
+"""Scan subsystem benchmark: lazy Dataset plans vs full-column scans.
 
 A selective predicate (one value out of a sorted 64k-row id column,
 selectivity ~0.0015%) must touch only the one row group whose zone map
 admits it: preads, bytes, and latency all collapse versus the full-column
-``find_rows`` baseline, with identical row-id results. Also reports the
-quality-threshold read (§2.5): presorted quality + zone maps turn a
-threshold scan into a prefix read."""
+baseline, with *byte-identical* results (the PR-2 acceptance check). The
+same plan then runs unchanged over a 4-shard directory dataset. Also
+reports the quality-threshold read (§2.5) and the plan-proven pruned bytes
+now tracked in the ``pruned_bytes`` CSV column."""
 
 from __future__ import annotations
 
@@ -16,14 +17,15 @@ import time
 import numpy as np
 
 from repro.core import BullionReader, BullionWriter, ColumnSpec, quality_sort
+from repro.dataset import dataset
 from repro.scan import C
 
 
 def _write(path: str, n_rows: int, rows_per_group: int,
-           sort_by_quality: bool) -> None:
+           sort_by_quality: bool, id_base: int = 0, seed: int = 0) -> None:
     """Zone maps prune along whatever the write path clustered: sorted ids
     for point probes, or quality-presorted rows (§2.5) for threshold reads."""
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     schema = [
         ColumnSpec("id", "int64"),
         ColumnSpec("quality", "float32"),
@@ -33,7 +35,7 @@ def _write(path: str, n_rows: int, rows_per_group: int,
                       sort_udf=quality_sort("quality") if sort_by_quality
                       else None)
     w.write_table({
-        "id": np.arange(n_rows, dtype=np.int64),
+        "id": np.arange(id_base, id_base + n_rows, dtype=np.int64),
         "quality": rng.random(n_rows).astype(np.float32),
         "payload": rng.normal(size=n_rows).astype(np.float32),
     })
@@ -47,54 +49,102 @@ def run(report):
         _write(path, n_rows, rows_per_group, sort_by_quality=False)
         victim = 12345
 
-        # baseline: full-column decode + isin (the seed's find_rows path)
+        # baseline: legacy find_rows + project gather (full decode on v0-style
+        # access: read, locate, re-read the matching group)
         t0 = time.perf_counter()
         with BullionReader(path) as r:
             data = r.read_column("id", drop_deleted=False, dequant=False)
             base_rows = np.flatnonzero(np.isin(np.asarray(data), [victim]))
+            legacy = []
+            for g, local in r.locate_rows(base_rows):
+                (tbl,) = r.project(["id", "payload"], groups=[g])
+                legacy.append({k: v[local] for k, v in tbl.items()})
+            legacy = {k: np.concatenate([t[k] for t in legacy])
+                      for k in ("id", "payload")}
             base_bytes = r.stats.bytes_read - r.stats.footer_bytes
             base_preads = r.stats.preads
         t_base = time.perf_counter() - t0
 
-        # pruned: zone maps skip every group but the victim's
+        # Dataset plan: zone maps skip every group but the victim's.
+        # scan_batches() delivers data + row ids in a single pass.
         t0 = time.perf_counter()
-        with BullionReader(path) as r:
-            rows = r.find_rows("id", [victim])
-            scan_bytes = r.stats.bytes_read - r.stats.footer_bytes
-            scan_preads = r.stats.preads
-            plan = r.scanner.plan(C("id") == victim)
+        with dataset(path) as ds:
+            q = ds.where(C("id") == victim).select(["id", "payload"])
+            batches = list(q.scan_batches())
+            got = {k: np.concatenate([b.table[k] for b in batches])
+                   for k in ("id", "payload")}
+            rows = np.concatenate([b.row_ids for b in batches])
+            st = ds.stats
+            scan_bytes = st.bytes_read - st.footer_bytes
+            scan_preads = st.preads
+            pruned_bytes = st.bytes_pruned
+            plan = q.physical_plan()
         t_scan = time.perf_counter() - t0
 
-        assert np.array_equal(np.sort(rows), np.sort(base_rows)), \
-            "pruned scan and brute force disagree"
+        # acceptance: byte-identical to the legacy path, no more data bytes
+        assert got["id"].tobytes() == legacy["id"].tobytes(), \
+            "Dataset plan and legacy find_rows+project disagree"
+        assert got["payload"].tobytes() == legacy["payload"].tobytes()
+        assert np.array_equal(np.sort(rows), np.sort(base_rows))
+        assert scan_bytes <= base_bytes, "plan read more than the legacy path"
+
         sel = len(rows) / n_rows
         report("scan/selectivity_pct", 100 * sel, f"{100 * sel:.4f}% of rows")
-        report("scan/groups_pruned",
-               len(plan.pruned_groups),
-               f"{len(plan.pruned_groups)}/{len(plan.groups) + len(plan.pruned_groups)} "
-               "row groups skipped before any pread")
+        report("scan/groups_pruned", plan.groups_pruned,
+               f"{plan.groups_pruned}/{plan.groups_total} row groups "
+               "skipped before any pread", pruned_bytes=pruned_bytes)
         report("scan/bytes_pruned_vs_full", base_bytes / max(scan_bytes, 1),
                f"{base_bytes / max(scan_bytes, 1):.1f}x fewer data bytes "
-               f"({scan_bytes}B vs {base_bytes}B)")
+               f"({scan_bytes}B vs {base_bytes}B)", pruned_bytes=pruned_bytes)
         report("scan/preads_pruned_vs_full", base_preads / max(scan_preads, 1),
                f"{base_preads} preads -> {scan_preads}")
         report("scan/time_pruned_vs_full", t_base / max(t_scan, 1e-9),
                f"{t_base / max(t_scan, 1e-9):.1f}x faster "
                f"({t_scan * 1e3:.2f}ms vs {t_base * 1e3:.2f}ms)")
 
+        # the same plan, unchanged, over a 4-shard directory dataset
+        shard_dir = os.path.join(td, "shards")
+        os.makedirs(shard_dir)
+        per_shard = n_rows // 4
+        for s in range(4):
+            _write(os.path.join(shard_dir, f"part-{s:04d}.bln"), per_shard,
+                   rows_per_group, sort_by_quality=False,
+                   id_base=s * per_shard, seed=s)
+        with dataset(shard_dir) as ds:
+            q = ds.where(C("id") == victim).select(["id", "payload"])
+            sb = list(q.scan_batches())
+            sharded = {k: np.concatenate([b.table[k] for b in sb])
+                       for k in ("id", "payload")}
+            srows = np.concatenate([b.row_ids for b in sb])
+            sbytes = ds.stats.bytes_read - ds.stats.footer_bytes
+            spruned = ds.stats.bytes_pruned
+            sharded_plan = q.physical_plan()
+        assert sharded["id"].tobytes() == legacy["id"].tobytes(), \
+            "multi-shard plan disagrees with the single-file result"
+        assert np.array_equal(srows, rows)
+        report("scan/multi_shard_bytes_vs_full", base_bytes / max(sbytes, 1),
+               f"4-shard dir: {len(sharded_plan.tasks)} task(s), "
+               f"{sharded_plan.groups_pruned}/{sharded_plan.groups_total} "
+               f"groups pruned, {sbytes}B read", pruned_bytes=spruned)
+
         # §2.5 quality-threshold read: presorted quality -> prefix of groups
         path = os.path.join(td, "scan_sorted.bln")
         _write(path, n_rows, rows_per_group, sort_by_quality=True)
-        with BullionReader(path) as r:
-            plan = r.scanner.plan(C("quality") >= 0.9)
-            for b in r.scanner.scan(C("quality") >= 0.9, columns=["payload"]):
+        with dataset(path) as ds:
+            q = ds.where(C("quality") >= 0.9).select(["payload"])
+            plan = q.physical_plan()
+            for _ in q.to_batches():
                 pass
-            thresh_bytes = r.stats.bytes_read - r.stats.footer_bytes
-        with BullionReader(path) as r:
-            for tbl in r.project(["quality", "payload"]):
-                pass
-            full_bytes = r.stats.bytes_read - r.stats.footer_bytes
+            st = ds.stats
+            thresh_bytes = st.bytes_read - st.footer_bytes
+            thresh_pruned = st.bytes_pruned
+        with dataset(path) as ds:
+            ds.select(["quality", "payload"]).to_table()
+            st = ds.stats
+            full_bytes = st.bytes_read - st.footer_bytes
+        kept = plan.groups_total - plan.groups_pruned
         report("scan/quality_threshold_bytes_vs_full",
                full_bytes / max(thresh_bytes, 1),
                f"top-10% quality read touches {thresh_bytes}B vs {full_bytes}B "
-               f"({len(plan.groups)}/{len(plan.groups) + len(plan.pruned_groups)} groups)")
+               f"({kept}/{plan.groups_total} groups)",
+               pruned_bytes=thresh_pruned)

@@ -1,4 +1,7 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints
+# ``name,us_per_call,pruned_bytes,derived`` CSV; ``pruned_bytes`` is the
+# plan-proven avoided I/O (IOStats.bytes_pruned) so pruning regressions show
+# up in the perf trajectory, blank for suites where pruning doesn't apply.
 from __future__ import annotations
 
 import sys
@@ -11,13 +14,15 @@ def main() -> None:
                    bench_multimodal, bench_projection, bench_quantization,
                    bench_roofline, bench_scan, bench_sparse_delta)
 
-    rows: list[tuple[str, float, str]] = []
+    rows: list[tuple[str, float, str, str]] = []
 
-    def report(name: str, value: float, derived: str = "") -> None:
-        rows.append((name, float(value), derived))
-        print(f"{name},{value:.6g},{derived}", flush=True)
+    def report(name: str, value: float, derived: str = "",
+               pruned_bytes=None) -> None:
+        pruned = "" if pruned_bytes is None else str(int(pruned_bytes))
+        rows.append((name, float(value), pruned, derived))
+        print(f"{name},{value:.6g},{pruned},{derived}", flush=True)
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,pruned_bytes,derived")
     suites = [
         ("metadata  (Fig. 5)", bench_metadata),
         ("deletion  (§2.1)", bench_deletion),

@@ -1,5 +1,6 @@
-"""Bullion quickstart: write a wide ML table, project it, quantize it,
-delete a user GDPR-style, and audit the physical erasure.
+"""Bullion quickstart: write a wide ML table, query it through the lazy
+``Dataset`` API, scale the same plan to a sharded directory, delete a user
+GDPR-style, and audit the physical erasure.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,19 +10,17 @@ import tempfile
 
 import numpy as np
 
-from repro.core import (BullionReader, BullionWriter, ColumnSpec, Compliance,
-                        QuantMode, QuantSpec, delete_rows, verify_deleted)
+from repro.core import (BullionWriter, ColumnSpec, Compliance, QuantMode,
+                        QuantSpec, delete_rows, verify_deleted)
 from repro.core.sparse_delta import SyntheticClickSeq
+from repro.dataset import dataset
+from repro.scan import C
 
 
-def main():
-    td = tempfile.mkdtemp()
-    path = os.path.join(td, "ads.bln")
-    rng = np.random.default_rng(0)
-    n = 10_000
-
-    # --- write: sparse click sequences (§2.2), BF16-quantized dense features
-    # (§2.4), strings, all cascade-encoded (§2.6) -----------------------------
+def write_shard(path, n, seed=0):
+    """Sparse click sequences (§2.2), BF16-quantized dense features (§2.4),
+    strings, all cascade-encoded (§2.6), with write-time zone maps."""
+    rng = np.random.default_rng(seed)
     schema = [
         ColumnSpec("user_id", "int64"),
         ColumnSpec("clk_seq_cids", "list<int64>", sparse_delta=True),
@@ -29,7 +28,7 @@ def main():
         ColumnSpec("device", "string"),
     ]
     table = {
-        "user_id": np.sort(rng.integers(0, 1000, n)),
+        "user_id": np.sort(rng.integers(seed * 1000, (seed + 1) * 1000, n)),
         "clk_seq_cids": SyntheticClickSeq(seq_len=128).generate(n),
         "ctr_7d": rng.random(n).astype(np.float32),
         "device": [b"ios" if i % 3 else b"android" for i in range(n)],
@@ -40,22 +39,60 @@ def main():
     raw = sum(np.asarray(v).nbytes if isinstance(v, np.ndarray)
               else sum(len(x) if isinstance(x, bytes) else x.nbytes for x in v)
               for v in table.values())
+    return stats, raw
+
+
+def main():
+    td = tempfile.mkdtemp()
+    path = os.path.join(td, "ads.bln")
+    n = 10_000
+    stats, raw = write_shard(path, n)
     print(f"wrote {stats['rows']} rows, {stats['groups']} groups -> "
           f"{os.path.getsize(path):,} bytes ({raw / os.path.getsize(path):.1f}x "
           "smaller than raw)")
 
-    # --- wide-table projection (§2.3): read 2 of 4 columns -------------------
-    with BullionReader(path) as r:
-        for tbl in r.project(["user_id", "ctr_7d"], groups=[0]):
-            print(f"projected group 0: {len(tbl['user_id'])} rows, "
-                  f"io={r.stats.bytes_read:,}B in {r.stats.preads} preads, "
-                  f"metadata parse {r.stats.metadata_seconds * 1e3:.2f} ms")
-            break
+    # --- lazy plans (§2.3 projection + zone-map pushdown): chaining is free,
+    # I/O happens at the terminal, and the optimizer prunes row groups the
+    # predicate provably cannot match ---------------------------------------
+    with dataset(path) as ds:
+        hot = (ds.where(C("ctr_7d") >= 0.99)
+                 .select(["user_id", "ctr_7d"]))
+        print(hot.explain())
+        tbl = hot.to_table()
+        st = ds.stats
+        print(f"hot-CTR plan: {len(tbl['user_id'])} rows, "
+              f"io={st.bytes_read:,}B in {st.preads} preads, "
+              f"{st.bytes_pruned:,}B proven prunable, "
+              f"metadata parse {st.metadata_seconds * 1e3:.2f} ms")
+        # head() pushes the limit into planning: trailing groups never read
+        first = ds.select(["device"]).head(5).to_table()
+        print(f"first 5 devices: {first['device']}")
+        # user_id is write-time sorted, so a point lookup prunes to the one
+        # group whose zone map admits it
+        uid = int(ds.select(["user_id"]).head(1).to_table()["user_id"][0])
+        point = ds.where(C("user_id") == uid).select(["ctr_7d"])
+        phys = point.physical_plan()
+        print(f"point lookup user {uid}: {len(phys.tasks)}/{phys.groups_total} "
+              f"groups read, {phys.bytes_pruned:,}B pruned by zone maps")
 
-    # --- GDPR delete (§2.1): physically erase one user's rows in place -------
-    with BullionReader(path) as r:
-        victim = int(r.read_column("user_id")[n // 2])
-        rows = r.find_rows("user_id", [victim])
+    # --- the same plan runs unchanged over a sharded directory --------------
+    shard_dir = os.path.join(td, "shards")
+    os.makedirs(shard_dir)
+    for s in range(4):
+        write_shard(os.path.join(shard_dir, f"part-{s:04d}.bln"),
+                    n // 4, seed=s)
+    with dataset(shard_dir) as ds:
+        q = ds.where(C("ctr_7d") >= 0.99).select(["user_id", "ctr_7d"])
+        tbl = q.to_table()
+        print(f"sharded dataset: {ds.n_shards} shards, {ds.num_rows} rows, "
+              f"same plan -> {len(tbl['user_id'])} hot rows, "
+              f"{ds.stats.bytes_pruned:,}B pruned")
+
+    # --- GDPR delete (§2.1): locate via a raw-row-space plan, physically
+    # erase in place, audit -------------------------------------------------
+    with dataset(path) as ds:
+        victim = int(ds.select(["user_id"]).to_table()["user_id"][n // 2])
+        rows = ds.where(C("user_id") == victim).drop_deleted(False).row_ids()
     d = delete_rows(path, rows, Compliance.LEVEL2)
     audit = verify_deleted(path, "user_id", [victim])
     print(f"deleted user {victim} ({d.rows_deleted} rows): "
@@ -63,8 +100,8 @@ def main():
           f"{d.bytes_full_rewrite:,}B ({d.bytes_full_rewrite / max(d.bytes_rewritten_data, 1):.0f}x less), "
           f"audit visible={audit['visible_rows']} raw={audit['raw_occurrences']}")
 
-    with BullionReader(path) as r:
-        assert not (r.read_column("user_id") == victim).any()
+    with dataset(path) as ds:
+        assert ds.where(C("user_id") == victim).count_rows() == 0
     print("post-delete read OK — the file is still fully queryable")
 
 

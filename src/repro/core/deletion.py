@@ -238,14 +238,14 @@ def delete_where(path: str, predicate,
     """Predicate-based delete: erase every row matching a ``repro.scan``
     predicate (e.g. ``C("user_id") == victim``).
 
-    Victim rows are located through the pruning scanner, so on files with
-    zone maps only the row groups whose statistics admit a match are read —
-    a compliance delete of one user touches a handful of groups instead of
-    decoding the whole column."""
-    from .reader import BullionReader
+    Victim rows are located through a raw-row-space Dataset plan, so on
+    files with zone maps only the row groups whose statistics admit a match
+    are read — a compliance delete of one user touches a handful of groups
+    instead of decoding the whole column."""
+    from ..dataset import dataset
 
-    with BullionReader(path) as r:
-        rows = r.scanner.find_rows(predicate, drop_deleted=False)
+    with dataset(path) as ds:
+        rows = ds.where(predicate).drop_deleted(False).row_ids()
     if len(rows) == 0:
         return DeleteStats()
     return delete_rows(path, rows, level)
@@ -255,12 +255,22 @@ def verify_deleted(path: str, column: str, forbidden_values) -> dict:
     """Compliance audit: scan raw storage for forbidden values.
 
     Returns counts of (a) rows still *visible* with the value and (b) raw
-    occurrences still physically present (L1 leaves them; L2 must not)."""
+    occurrences still physically present (L1 leaves them; L2 must not).
+
+    The raw pass audits *physical page content* via the low-level decode —
+    below the Dataset row-space API, whose drop_deleted=False mode pads
+    compact-deleted rows with 0 to keep raw row ids stable (padding would
+    count as a false occurrence when 0 is itself a forbidden value)."""
+    from ..dataset.executor import decode_group
     from .reader import BullionReader
 
     with BullionReader(path) as r:
         visible = r.read_column(column, drop_deleted=True, dequant=False)
-        raw = r.read_column(column, drop_deleted=False, dequant=False)
+        parts = [decode_group(r, [column], g, drop_deleted=False,
+                              dequant=False)[column]
+                 for g in range(r.footer.n_groups)]
+        raw = np.concatenate(parts) if isinstance(parts[0], np.ndarray) \
+            else [v for p in parts for v in p]
     forbidden = np.asarray(forbidden_values)
     if isinstance(visible, np.ndarray):
         n_vis = int(np.isin(visible, forbidden).sum())

@@ -109,23 +109,17 @@ def write_multimodal_dataset(meta_path: str, media_path: str,
 def quality_filtered_read(meta_path: str, columns: Sequence[str],
                           top_fraction: float) -> tuple[list[dict], "IOStats"]:
     """Read the top-`top_fraction` quality rows. Because rows were presorted
-    by quality at write time, this touches only a *prefix* of row groups —
-    sequential I/O instead of scattered random reads."""
-    from .reader import BullionReader
+    by quality at write time, the ``head`` plan touches only a *prefix* of
+    row groups — the limit is pushed into physical planning, so trailing
+    groups are accounted as pruned bytes and never pread."""
+    from ..dataset import dataset
 
-    with BullionReader(meta_path) as r:
-        n_take = int(r.num_rows * top_fraction)
-        fv = r.footer
-        from .footer import Sec
-        rpg = fv.arr(Sec.ROWS_PER_GROUP, np.uint32).astype(np.int64)
-        bounds = np.concatenate([[0], np.cumsum(rpg)])
-        n_groups = int(np.searchsorted(bounds, n_take, side="left"))
-        n_groups = max(1, min(n_groups + (bounds[n_groups] < n_take), len(rpg)))
-        out = []
-        taken = 0
-        for tbl in r.project(list(columns), groups=range(n_groups)):
-            take = min(n_take - taken, len(next(iter(tbl.values()))))
-            out.append({k: v[:take] for k, v in tbl.items()})
-            taken += take
-        stats = r.stats
+    with dataset(meta_path) as ds:
+        n_take = int(ds.num_rows * top_fraction)
+        out = list(ds.select(list(columns)).head(n_take).to_batches())
+        if not out:
+            # n_take == 0: keep the legacy shape (one table of typed empty
+            # columns) so callers can concatenate unconditionally
+            out = [ds.select(list(columns)).head(0).to_table()]
+        stats = ds.stats
     return out, stats

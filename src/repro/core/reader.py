@@ -6,23 +6,24 @@ page ranges are coalesced into single I/O operations (the Alpha-style
 optimization the paper cites) because ML projections read many columns of the
 same row group.
 
-Predicated reads go through the statistics-driven scan subsystem
-(``repro.scan``): zone maps persisted by the writer prune whole row groups
-before any data pread, and only surviving groups are decoded and filtered.
+``BullionReader`` owns the file handle, the zero-copy footer view, and the
+coalesced-pread primitive (``_read_pages``). Everything above that — decode,
+deletion masking, dequantization, predicate filtering — lives in the unified
+lazy ``Dataset`` pipeline (``repro.dataset``); the ``project``/
+``read_column``/``find_rows`` methods below are deprecated shims that build
+the equivalent one-file plans.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
-from . import pages
-from .encodings.base import code_dtype
-from .footer import ColKind, FooterView, PageType, Sec, read_footer
-from .quantization import QuantMode, QuantSpec, dequantize
+from .footer import ColKind, Sec, read_footer
+from .quantization import QuantSpec
 
 COALESCE_GAP = 64 * 1024  # merge preads when the hole is smaller than this
 
@@ -33,13 +34,20 @@ class IOStats:
     bytes_read: int = 0
     footer_bytes: int = 0
     metadata_seconds: float = 0.0
+    bytes_pruned: int = 0     # data bytes a plan proved it never had to read
+                              # (zone maps, row location, head limits)
 
 
 class BullionReader:
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, footer=None):
         self.path = path
         t0 = time.perf_counter()
-        self.footer, self.footer_offset = read_footer(path)
+        if footer is None:
+            self.footer, self.footer_offset = read_footer(path)
+        else:
+            # pre-parsed (FooterView, offset) from dataset discovery — the
+            # metadata was read exactly once, by the DataSource
+            self.footer, self.footer_offset = footer
         self.stats = IOStats(preads=2, footer_bytes=len(self.footer._buf),
                              bytes_read=len(self.footer._buf))
         self.stats.metadata_seconds = time.perf_counter() - t0
@@ -47,7 +55,15 @@ class BullionReader:
         self._scanner = None
 
     def close(self) -> None:
-        self._f.close()
+        """Idempotent: safe to call repeatedly (context-manager exits after
+        an aborted plan may race explicit close() calls)."""
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    @property
+    def closed(self) -> bool:
+        return self._f is None
 
     def __enter__(self):
         return self
@@ -77,8 +93,15 @@ class BullionReader:
             self._scanner = Scanner(self)
         return self._scanner
 
+    def _dataset(self):
+        """One-file lazy Dataset over this (still caller-owned) reader."""
+        from ..dataset.core import Dataset
+        return Dataset.from_reader(self)
+
     # -- I/O ----------------------------------------------------------------------
     def _pread(self, offset: int, size: int) -> bytes:
+        if self._f is None:
+            raise ValueError(f"{self.path}: reader is closed")
         self._f.seek(offset)
         self.stats.preads += 1
         self.stats.bytes_read += size
@@ -107,53 +130,26 @@ class BullionReader:
             i = j
         return out
 
-    # -- projection ----------------------------------------------------------------
+    # -- projection (deprecated shims over the Dataset plan path) ----------------
     def project(self, names: Sequence[str], groups: Optional[Sequence[int]] = None,
                 drop_deleted: bool = True, dequant: bool = True,
                 predicate=None) -> Iterator[dict]:
-        """Yield one dict per row group with decoded columns.
+        """Deprecated: use ``repro.dataset``. Yields one dict per row group
+        with decoded columns, via the equivalent one-file plan.
 
         With ``predicate`` (a ``repro.scan`` Predicate), row groups the zone
         maps prove empty are skipped without any data pread and the yielded
         tables contain only the matching rows (one dict per surviving group
         with >= 1 match)."""
+        ds = self._dataset().select(list(names)) \
+            .drop_deleted(drop_deleted).dequantized(dequant) \
+            ._with_groups(groups)
         if predicate is not None:
-            for batch in self.scanner.scan(predicate, columns=list(names),
-                                           groups=groups,
-                                           drop_deleted=drop_deleted,
-                                           dequant=dequant):
-                yield batch.table
-            return
-        fv = self.footer
-        cols = [fv.column_index(n) for n in names]
-        kinds = fv.arr(Sec.COL_KIND, np.uint8)
-        flags = fv.arr(Sec.PAGE_FLAGS, np.uint8)
-        page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
-        for g in (groups if groups is not None else range(fv.n_groups)):
-            wanted: list[int] = []
-            for c in cols:
-                s, e = fv.chunk_pages(g, c)
-                wanted.extend(range(s, e))
-            raw = self._read_pages(wanted)
-            out: dict = {}
-            for name, c in zip(names, cols):
-                s, e = fv.chunk_pages(g, c)
-                parts = []
-                for p in range(s, e):
-                    decoded = pages.decode_page(int(flags[p]) & 0x7F, raw[p])
-                    if drop_deleted:
-                        decoded = pages.apply_dv(decoded, fv.deletion_vector(p),
-                                                 int(page_rows[p]))
-                    parts.append(decoded)
-                val = parts[0] if len(parts) == 1 else _concat(parts)
-                if dequant and kinds[c] == int(ColKind.SCALAR):
-                    spec = self.quant_spec(c)
-                    if spec.mode != QuantMode.NONE:
-                        val = dequantize(np.asarray(val), spec)
-                out[name] = val
-            yield out
+            ds = ds.where(predicate)
+        return ds.to_batches()
 
     def read_column(self, name: str, **kw) -> np.ndarray | list:
+        """Deprecated: use ``repro.dataset``."""
         parts = [t[name] for t in self.project([name], **kw)]
         if isinstance(parts[0], np.ndarray):
             return np.concatenate(parts)
@@ -162,34 +158,22 @@ class BullionReader:
     # -- helpers for deletion / benchmarks ----------------------------------------
     def locate_rows(self, global_rows: np.ndarray) -> list[tuple[int, np.ndarray]]:
         """Map global row ids -> [(group, local_rows)]."""
-        rpg = self.footer.arr(Sec.ROWS_PER_GROUP, np.uint32).astype(np.int64)
-        bounds = np.concatenate([[0], np.cumsum(rpg)])
-        global_rows = np.asarray(global_rows, np.int64)
-        g = np.searchsorted(bounds, global_rows, side="right") - 1
-        out = []
-        for grp in np.unique(g):
-            out.append((int(grp), global_rows[g == grp] - bounds[grp]))
-        return out
+        from ..dataset.plan import locate_rows
+        return list(locate_rows(self.footer, global_rows).items())
 
     def find_rows(self, column: str, values) -> np.ndarray:
-        """Predicate helper: global row ids (raw row space) where
-        column ∈ values.
+        """Deprecated: use ``repro.dataset``. Global row ids (raw row space)
+        where column ∈ values.
 
-        Rewritten on the pruning scanner: on files with zone maps
-        (format v1+) only the row groups whose statistics admit one of the
-        values are read; v0 files fall back to the full-column scan.
-        String columns keep the legacy full-decode membership probe
-        (predicates cover scalar columns only)."""
+        On files with zone maps (format v1+) only the row groups whose
+        statistics admit one of the values are read; v0 files fall back to
+        the full-column scan. String columns keep the legacy full-decode
+        membership probe (predicates cover scalar columns only)."""
         from ..scan.predicate import In
         kinds = self.footer.arr(Sec.COL_KIND, np.uint8)
         if kinds[self.footer.column_index(column)] not in \
                 (int(ColKind.SCALAR), int(ColKind.MEDIA_REF)):
             data = self.read_column(column, drop_deleted=False, dequant=False)
             return np.flatnonzero(np.isin(np.asarray(data), np.asarray(values)))
-        return self.scanner.find_rows(In(column, values))
-
-
-def _concat(parts):
-    if isinstance(parts[0], np.ndarray):
-        return np.concatenate(parts)
-    return [r for p in parts for r in p]
+        return self._dataset().where(In(column, values)) \
+            .drop_deleted(False).row_ids()

@@ -1,10 +1,11 @@
 """Bullion-backed training input pipeline.
 
-Wide-table projection (§2.3) is the read primitive: the loader touches only
-the projected columns' pages. With a ``predicate`` (repro.scan), the pruning
-scanner additionally drops whole row groups the zone maps prove empty — e.g.
-quality-threshold training reads (§2.5) on a quality-presorted file touch
-only the leading groups. Work is split by row group across data-parallel
+The loader is a streaming adapter over the lazy ``Dataset`` plan path: the
+plan (projection to the token column, optional quality predicate) is built
+and lowered once at construction — zone-map pruning decides the surviving
+row groups up front — and each group is then read through the same
+prune -> pread -> decode -> deletion-mask -> dequantize -> filter pipeline
+every other surface uses. Work is split by row group across data-parallel
 ranks (disjoint, contiguous ranges — the quality-presorted layout keeps each
 rank's reads sequential), host decode overlaps device compute via a prefetch
 thread, and the cursor (epoch, group index) is checkpointable for
@@ -20,7 +21,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from ..core.reader import BullionReader
+from ..dataset import dataset
 
 
 @dataclass
@@ -41,15 +42,23 @@ class BullionLoader:
         self.rank, self.world = rank, world
         self.column = column
         self.state = state or LoaderState()
-        self.reader = BullionReader(path)
-        self.n_groups = self.reader.footer.n_groups
-        self.predicate = predicate
+        self.dataset = dataset(path).select([column])
         if predicate is not None:
-            # zone-map pruning is static per file: plan once, stream forever
-            plan = self.reader.scanner.plan(predicate, columns=[column])
-            self._groups = plan.groups
-        else:
-            self._groups = list(range(self.n_groups))
+            self.dataset = self.dataset.where(predicate)
+        # planning is static per dataset: lower once (zone-map pruning picks
+        # the surviving groups and credits pruned bytes), stream forever.
+        # Groups are scheduled by *global* group index — shard-local index
+        # offset by the groups of preceding shards — so a directory/glob
+        # dataset streams every shard and a one-file cursor keeps the seed
+        # checkpoint semantics (global index == file group index).
+        src = self.dataset._source
+        group_off = [0]
+        for s in range(src.n_shards):
+            group_off.append(group_off[-1] + src.footer(s).n_groups)
+        self.n_groups = group_off[-1]
+        self._tasks = {group_off[t.shard] + t.group: t
+                       for t in self.dataset.tasks()}
+        self._groups = sorted(self._tasks)
         self._tokens_per_batch = batch_size * (seq_len + 1)
         self._buf = np.zeros(0, np.int32)
         self._queue: queue.Queue = queue.Queue(maxsize=prefetch)
@@ -62,17 +71,11 @@ class BullionLoader:
                 if i % self.world == self.rank]
 
     def _read_group(self, g: int) -> np.ndarray:
-        if self.predicate is not None:
-            docs: list | np.ndarray = []
-            for batch in self.reader.scanner.scan(self.predicate,
-                                                  columns=[self.column],
-                                                  groups=[g]):
-                docs = batch.table[self.column]
-            if len(docs) == 0:
-                return np.zeros(0, np.int32)
-        else:
-            tbl = next(iter(self.reader.project([self.column], groups=[g])))
-            docs = tbl[self.column]
+        task = self._tasks[g]
+        tbl = self.dataset.read_group(task.group, shard=task.shard)
+        docs = tbl[self.column] if tbl is not None else []
+        if len(docs) == 0:
+            return np.zeros(0, np.int32)
         return np.concatenate([np.asarray(d, np.int32) for d in docs]) \
             if isinstance(docs, list) else np.asarray(docs, np.int32)
 
@@ -140,4 +143,4 @@ class BullionLoader:
                 self._queue.get_nowait()
         except queue.Empty:
             pass
-        self.reader.close()
+        self.dataset.close()

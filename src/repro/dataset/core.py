@@ -1,0 +1,362 @@
+"""Lazy ``Dataset``: chainable logical plans over Bullion data.
+
+``dataset(path_or_glob)`` opens one file, a directory of shards, a glob, or
+an explicit path list. Chaining (`select`/`where`/`with_rows`/`head`/...)
+only rewrites an immutable ``LogicalPlan``; no I/O happens until a terminal
+(``to_table``/``to_batches``/``count_rows``/``row_ids``) optimizes, lowers,
+and executes it. The same plan runs unchanged over single- and multi-file
+datasets.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+from ..core.footer import ColKind, Sec
+from ..core.reader import BullionReader, IOStats
+from ..scan.predicate import Predicate
+from . import executor
+from .plan import LogicalPlan, OptimizedPlan, PhysicalPlan, ScanTask, \
+    group_bounds as _group_bounds, lower, optimize
+from .source import DataSource, PathSpec
+
+
+def dataset(path_or_paths: PathSpec) -> "Dataset":
+    """Open a lazy Dataset over one Bullion file, a shard directory, a glob
+    pattern, or an explicit list of shard paths."""
+    from .source import discover
+    return Dataset(DataSource(discover(path_or_paths)))
+
+
+@dataclass
+class DatasetBatch:
+    """One surviving row group's worth of results."""
+
+    shard: int
+    group: int
+    row_ids: np.ndarray              # global ids, raw row space
+    table: dict = field(default_factory=dict)
+
+
+class Dataset:
+    """A logical scan plan over one or more Bullion shards."""
+
+    def __init__(self, source: DataSource,
+                 plan: Optional[LogicalPlan] = None):
+        self._source = source
+        self._plan = plan or LogicalPlan()
+        # caches: the logical plan and footers are immutable for this
+        # instance, so optimize/lower run once however many terminals fire
+        self._opt: Optional[OptimizedPlan] = None
+        self._phys: Optional[PhysicalPlan] = None
+        self._credited = False          # pruned bytes: one credit per plan
+
+    @classmethod
+    def from_reader(cls, reader: BullionReader) -> "Dataset":
+        """One-file dataset over an already-open reader (legacy shims).
+        The caller keeps ownership of the reader."""
+        return cls(DataSource.from_reader(reader))
+
+    def _chain(self, **kw) -> "Dataset":
+        return Dataset(self._source, self._plan.replace(**kw))
+
+    # -- chainable transforms ---------------------------------------------------
+    def select(self, columns: Sequence[str]) -> "Dataset":
+        """Project to ``columns`` (projection narrowing prunes all others)."""
+        return self._chain(columns=tuple(columns))
+
+    def where(self, predicate: Predicate) -> "Dataset":
+        """Filter rows; repeated calls AND together. Zone maps prune row
+        groups the predicate provably cannot match before any data pread."""
+        combined = predicate if self._plan.predicate is None \
+            else self._plan.predicate & predicate
+        return self._chain(predicate=combined)
+
+    def with_rows(self, row_ids) -> "Dataset":
+        """Restrict to global row ids (raw row space, as reported by
+        ``row_ids()``/``find_rows``). Groups holding none of them are pruned."""
+        ids = np.unique(np.asarray(row_ids, np.int64))
+        return self._chain(row_ids=ids)
+
+    def dequantized(self, flag: bool = True) -> "Dataset":
+        """Materialize quantized columns in the logical (float) domain
+        (default) or as raw stored values (``False``). Predicates always
+        evaluate in the logical domain either way."""
+        return self._chain(dequantize=flag)
+
+    def drop_deleted(self, flag: bool = True) -> "Dataset":
+        """Hide deletion-vector rows (default) or keep the raw row space
+        (``False``; what compliance tooling audits)."""
+        return self._chain(drop_deleted=flag)
+
+    def head(self, n: int) -> "Dataset":
+        """Limit to the first ``n`` rows in scan order. Without a predicate
+        the limit is pushed into planning: groups past the prefix holding
+        ``n`` rows are never read."""
+        return self._chain(limit=n)
+
+    def _with_groups(self, groups: Optional[Sequence[int]]) -> "Dataset":
+        """Legacy single-shard row-group restriction (internal)."""
+        if groups is None:
+            return self
+        return self._chain(groups=tuple(int(g) for g in groups))
+
+    def _with_kernel(self, use_kernel: Optional[bool]) -> "Dataset":
+        return self._chain(use_kernel=use_kernel)
+
+    # -- metadata ---------------------------------------------------------------
+    @property
+    def column_names(self) -> list[str]:
+        return list(self._source.column_names)
+
+    @property
+    def num_rows(self) -> int:
+        """Raw rows across all shards (metadata only; ignores the plan)."""
+        return self._source.num_rows
+
+    @property
+    def n_shards(self) -> int:
+        return self._source.n_shards
+
+    @property
+    def stats(self) -> IOStats:
+        """Aggregate I/O accounting across every shard reader."""
+        return self._source.stats
+
+    # -- planning ---------------------------------------------------------------
+    def plan(self) -> OptimizedPlan:
+        """Optimize the logical plan (no I/O beyond footers). Cached: the
+        logical plan is immutable, so hot per-group paths (the training
+        loader) don't re-validate on every call."""
+        if self._opt is None:
+            self._opt = optimize(self._plan, self._source)
+        return self._opt
+
+    def physical_plan(self) -> PhysicalPlan:
+        """Optimize + lower: per-(shard, group) tasks with pruned-bytes
+        accounting. Footer-only; no file handle is opened and no data page
+        touched. Cached per instance."""
+        if self._phys is None:
+            self._phys = lower(self.plan(), self._source)
+        return self._phys
+
+    def tasks(self) -> list[ScanTask]:
+        """The physical task list, crediting pruned bytes to ``stats`` (one
+        planning pass = one scan's worth of avoided I/O)."""
+        phys = self.physical_plan()
+        self._credit(phys)
+        return phys.tasks
+
+    def explain(self) -> str:
+        """Human-readable logical + physical plan."""
+        opt = self.plan()
+        phys = self.physical_plan()
+        p = self._plan
+        lines = [
+            "LogicalPlan:",
+            f"  select: {list(opt.output_columns)}",
+            f"  where: {p.predicate!r} ({len(opt.conjuncts)} conjunct(s))"
+            if p.predicate is not None else "  where: -",
+            f"  rows: {len(p.row_ids)} pinned row id(s)"
+            if p.row_ids is not None else "  rows: -",
+            f"  dequantize: {p.dequantize}  drop_deleted: {p.drop_deleted}"
+            f"  limit: {p.limit}",
+            f"  read columns (narrowed): {list(opt.read_columns)}",
+            f"PhysicalPlan: {self.n_shards} shard(s), {len(phys.tasks)} task(s)",
+            f"  groups: {phys.groups_total - phys.groups_pruned}/"
+            f"{phys.groups_total} kept ({phys.groups_pruned} pruned)",
+            f"  bytes: <= {phys.bytes_total - phys.bytes_pruned} read, "
+            f"{phys.bytes_pruned} pruned of {phys.bytes_total} total",
+        ]
+        return "\n".join(lines)
+
+    # -- execution --------------------------------------------------------------
+    def _credit(self, phys: PhysicalPlan) -> None:
+        # One credit per Dataset instance (= one planned scan), however many
+        # terminals observe it — tasks() + read_group() streaming and a
+        # plain to_table() both count the avoided I/O exactly once.
+        if phys.bytes_pruned and not self._credited:
+            self._credited = True
+            self._source.credit_pruned(phys.bytes_pruned)
+
+    def _execute(self, output_columns: Optional[Sequence[str]] = None
+                 ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
+        """Run the plan; ``output_columns`` overrides materialization for
+        data-free terminals (row_ids/count) without spawning a new instance
+        (caches and the pruned-bytes credit stay shared)."""
+        opt = self.plan()
+        phys = self.physical_plan()
+        self._credit(phys)
+        p = opt.logical
+        cols = opt.output_columns if output_columns is None \
+            else tuple(output_columns)
+        filtered = p.predicate is not None or p.row_ids is not None
+        emitted, limit = 0, p.limit
+        for task in phys.tasks:
+            if limit is not None and emitted >= limit:
+                break
+            res = executor.execute_group(
+                self._source.reader(task.shard), task.group,
+                columns=cols, predicate=p.predicate,
+                rows=task.rows, drop_deleted=p.drop_deleted,
+                dequant=p.dequantize, use_kernel=p.use_kernel)
+            if res is None or (filtered and not len(res.row_ids)):
+                continue
+            if limit is not None and emitted + len(res.row_ids) > limit:
+                res = executor.truncate_result(res, limit - emitted)
+            emitted += len(res.row_ids)
+            yield task, res
+
+    def read_group(self, group: int, shard: int = 0) -> Optional[dict]:
+        """Execute the plan over one row group (loader-style streaming).
+        Returns the table dict, or None when no row survives. Honors the
+        plan's predicate and ``with_rows`` pinning; ``head`` limits don't
+        apply (per-group streaming has no cross-group cursor)."""
+        from .plan import locate_rows
+        opt = self.plan()
+        p = opt.logical
+        rows = None
+        if p.row_ids is not None:
+            lo, hi = self._source.row_offset(shard), \
+                self._source.row_offset(shard + 1)
+            ids = p.row_ids[(p.row_ids >= lo) & (p.row_ids < hi)]
+            rows = locate_rows(self._source.footer(shard),
+                               ids - lo).get(group) if len(ids) else None
+            if rows is None:
+                return None
+        res = executor.execute_group(
+            self._source.reader(shard), group, columns=opt.output_columns,
+            predicate=p.predicate, rows=rows, drop_deleted=p.drop_deleted,
+            dequant=p.dequantize, use_kernel=p.use_kernel)
+        return None if res is None else res.table
+
+    # -- terminals --------------------------------------------------------------
+    def scan_batches(self) -> Iterator[DatasetBatch]:
+        """Stream per-group results *with* their global row ids — the
+        single-pass terminal when a caller needs both the data and the row
+        identity (one scan, one pruned-bytes credit)."""
+        bounds: dict[int, np.ndarray] = {}
+        for task, res in self._execute():
+            if task.shard not in bounds:
+                bounds[task.shard] = \
+                    _group_bounds(self._source.footer(task.shard))
+            offset = self._source.row_offset(task.shard) + \
+                bounds[task.shard][task.group]
+            yield DatasetBatch(shard=task.shard, group=task.group,
+                               row_ids=offset + res.row_ids, table=res.table)
+
+    def to_batches(self, batch_size: Optional[int] = None) -> Iterator[dict]:
+        """Stream result tables. ``batch_size=None`` yields one table per
+        surviving row group (natural batches); an integer re-slices the
+        stream into tables of exactly ``batch_size`` rows (last may be
+        short)."""
+        if batch_size is None:
+            for _, res in self._execute():
+                yield res.table
+            return
+        if batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {batch_size}")
+        cols = self.plan().output_columns
+        buf: list[dict] = []
+        buffered = 0
+        for _, res in self._execute():
+            buf.append(res.table)
+            buffered += len(res.row_ids)
+            while buffered >= batch_size:
+                merged = _concat_tables(buf, cols)
+                yield {k: v[:batch_size] for k, v in merged.items()}
+                rest = {k: v[batch_size:] for k, v in merged.items()}
+                buf, buffered = [rest], buffered - batch_size
+        if buffered:
+            yield _concat_tables(buf, cols)
+
+    def to_table(self) -> dict:
+        """Materialize the whole result as one column dict."""
+        cols = self.plan().output_columns
+        return _concat_tables([res.table for _, res in self._execute()], cols,
+                              empty=self._empty_column)
+
+    def row_ids(self) -> np.ndarray:
+        """Global row ids (raw row space) of every surviving row. Reads only
+        the predicate columns (use ``scan_batches`` for ids + data in one
+        pass)."""
+        parts, bounds = [], {}
+        for task, res in self._execute(output_columns=()):
+            if task.shard not in bounds:
+                bounds[task.shard] = \
+                    _group_bounds(self._source.footer(task.shard))
+            parts.append(self._source.row_offset(task.shard)
+                         + bounds[task.shard][task.group] + res.row_ids)
+        return np.concatenate(parts).astype(np.int64) if parts \
+            else np.zeros(0, np.int64)
+
+    def count_rows(self) -> int:
+        """Number of surviving rows. Without a predicate or pinned rows this
+        is answered from footers alone — zero data preads."""
+        p = self._plan
+        self.plan()                    # validate even on the metadata path
+        if p.predicate is None and p.row_ids is None:
+            total = 0
+            for s in range(self._source.n_shards):
+                fv = self._source.footer(s)
+                groups = p.groups if p.groups is not None \
+                    else range(fv.n_groups)
+                for g in groups:
+                    total += executor.visible_row_count(fv, g) \
+                        if p.drop_deleted else executor.raw_row_count(fv, g)
+            return total if p.limit is None else min(total, p.limit)
+        return sum(len(res.row_ids)
+                   for _, res in self._execute(output_columns=()))
+
+    def _empty_column(self, name: str):
+        """Typed empty result for a column no batch produced: scalar columns
+        keep their (logical or storage) dtype, list/string columns are []."""
+        from ..core.encodings.base import code_dtype
+        fv = self._source.footer(0)
+        c = fv.column_index(name)
+        kind = int(fv.arr(Sec.COL_KIND, np.uint8)[c])
+        if kind not in (int(ColKind.SCALAR), int(ColKind.MEDIA_REF)):
+            return []
+        sec = Sec.COL_LOGICAL if (self._plan.dequantize
+                                  and kind == int(ColKind.SCALAR)) \
+            else Sec.COL_DTYPE
+        return np.zeros(0, code_dtype(int(fv.arr(sec, np.uint8)[c])))
+
+    # -- lifecycle --------------------------------------------------------------
+    def close(self) -> None:
+        """Close shard readers this dataset owns (idempotent)."""
+        self._source.close()
+
+    def __enter__(self) -> "Dataset":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        p = self._plan
+        bits = [f"shards={self.n_shards}", f"rows={self.num_rows}"]
+        if p.columns is not None:
+            bits.append(f"select={list(p.columns)}")
+        if p.predicate is not None:
+            bits.append(f"where={p.predicate!r}")
+        if p.limit is not None:
+            bits.append(f"head={p.limit}")
+        return f"Dataset({', '.join(bits)})"
+
+
+def _concat_tables(tables: list[dict], columns: Sequence[str],
+                   empty=None) -> dict:
+    out: dict = {}
+    for name in columns:
+        parts = [t[name] for t in tables if name in t]
+        if not parts:
+            out[name] = empty(name) if empty is not None else []
+        elif isinstance(parts[0], np.ndarray):
+            out[name] = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        else:
+            out[name] = [r for p in parts for r in p]
+    return out

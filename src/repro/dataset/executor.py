@@ -1,0 +1,260 @@
+"""Physical-plan execution: the one read pipeline.
+
+Every read path in the system — ``Dataset`` terminals, the legacy
+``BullionReader.project``/``find_rows`` shims, ``Scanner.scan``, the
+training loader, quality-filtered reads, and predicate deletes — bottoms
+out in ``execute_group``, which orders the stages exactly once:
+
+    prune (done at plan time) -> pread (coalesced) -> decode ->
+    deletion-mask -> dequantize -> filter -> gather
+
+``decode_group`` is the pread+decode+mask+dequantize core (moved here from
+``BullionReader.project``); ``execute_group`` layers predicate evaluation
+(NumPy or the Pallas batch filter kernel) and raw-row-id selection on top.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Optional, Sequence
+
+import numpy as np
+
+from ..core import pages
+from ..core.footer import ColKind, Sec
+from ..core.quantization import QuantMode, dequantize
+from ..scan.predicate import Predicate, conjunctive_ranges, evaluate
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from ..core.reader import BullionReader
+
+
+@dataclass
+class GroupResult:
+    """Matching rows of one row group (row ids are group-local, raw space)."""
+
+    row_ids: np.ndarray
+    table: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# decode core: pread -> decode -> deletion-mask -> dequantize
+# ---------------------------------------------------------------------------
+
+
+def decode_group(reader: "BullionReader", names: Sequence[str], group: int, *,
+                 drop_deleted: bool = True, dequant: bool = True) -> dict:
+    """Decode one row group's columns via coalesced preads."""
+    fv = reader.footer
+    cols = [fv.column_index(n) for n in names]
+    kinds = fv.arr(Sec.COL_KIND, np.uint8)
+    flags = fv.arr(Sec.PAGE_FLAGS, np.uint8)
+    page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
+    wanted: list[int] = []
+    for c in cols:
+        s, e = fv.chunk_pages(group, c)
+        wanted.extend(range(s, e))
+    raw = reader._read_pages(wanted)
+    out: dict = {}
+    for name, c in zip(names, cols):
+        s, e = fv.chunk_pages(group, c)
+        parts = []
+        for p in range(s, e):
+            decoded = pages.decode_page(int(flags[p]) & 0x7F, raw[p])
+            if drop_deleted:
+                decoded = pages.apply_dv(decoded, fv.deletion_vector(p),
+                                         int(page_rows[p]))
+            parts.append(decoded)
+        val = parts[0] if len(parts) == 1 else _concat(parts)
+        if dequant and kinds[c] == int(ColKind.SCALAR):
+            spec = reader.quant_spec(c)
+            if spec.mode != QuantMode.NONE:
+                val = dequantize(np.asarray(val), spec)
+        out[name] = val
+    return out
+
+
+# ---------------------------------------------------------------------------
+# row-space helpers (footer-only: planning never needs a file handle)
+# ---------------------------------------------------------------------------
+
+
+def raw_row_count(fv, group: int) -> int:
+    return int(fv.arr(Sec.ROWS_PER_GROUP, np.uint32)[group])
+
+
+def group_keep(fv, group: int, col: int = 0) -> Optional[np.ndarray]:
+    """Raw-row keep mask from deletion vectors (None = nothing deleted)."""
+    s, e = fv.chunk_pages(group, col)
+    page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
+    parts, any_dv = [], False
+    for p in range(s, e):
+        dv = fv.deletion_vector(p)
+        if dv is None:
+            parts.append(np.ones(int(page_rows[p]), bool))
+        else:
+            parts.append(~dv)
+            any_dv = True
+    return np.concatenate(parts) if any_dv else None
+
+
+def visible_row_count(fv, group: int) -> int:
+    keep = group_keep(fv, group)
+    return raw_row_count(fv, group) if keep is None else int(keep.sum())
+
+
+def expand_raw(fv, group: int, name: str, values):
+    """Re-align a drop_deleted=False column to the raw row space.
+
+    Compact-deleted pages (§2.1 RLE rule) physically remove rows, so the
+    decoded array is shorter than the group's raw row count and indices
+    would otherwise shift. Erased positions read as 0 — the same value
+    in-place masking writes — and zone maps of every touched page were
+    already widened to include 0, so pruning stays consistent."""
+    if not isinstance(values, np.ndarray):
+        return values
+    rows = raw_row_count(fv, group)
+    if len(values) >= rows:
+        return values[:rows]
+    keep = group_keep(fv, group, fv.column_index(name))
+    out = np.zeros(rows, values.dtype)
+    out[np.flatnonzero(keep)] = values
+    return out
+
+
+# ---------------------------------------------------------------------------
+# predicate evaluation (NumPy or Pallas batch filter kernel)
+# ---------------------------------------------------------------------------
+
+
+def _f32_shrink(lo: float, hi: float) -> tuple[np.float32, np.float32]:
+    """Tightest float32 interval inside the float64 one.
+
+    Exact for float32 column data: a float32 x satisfies lo <= x <= hi iff
+    it satisfies the shrunk float32 bounds.
+    """
+    lo32, hi32 = np.float32(lo), np.float32(hi)
+    if np.float64(lo32) < lo:
+        lo32 = np.nextafter(lo32, np.float32(np.inf), dtype=np.float32)
+    if np.float64(hi32) > hi:
+        hi32 = np.nextafter(hi32, np.float32(-np.inf), dtype=np.float32)
+    return lo32, hi32
+
+
+def eval_mask(pred: Predicate, tbl: dict,
+              use_kernel: Optional[bool]) -> np.ndarray:
+    """Predicate -> row mask; Pallas kernel when the predicate compiles
+    to conjunctive ranges over float32 columns (exact there), NumPy
+    otherwise."""
+    ranges = conjunctive_ranges(pred)
+    kernel_ok = ranges is not None and all(
+        isinstance(tbl[c], np.ndarray) and tbl[c].dtype == np.float32
+        for c in ranges)
+    if use_kernel and not kernel_ok:
+        raise ValueError(
+            "kernel filter path requires a conjunctive range predicate "
+            "over float32 columns")
+    if use_kernel is None:
+        use_kernel = kernel_ok
+    if not use_kernel:
+        return evaluate(pred, tbl)
+    from ..kernels.filter import range_mask
+    names = list(ranges)
+    bounds = [_f32_shrink(*ranges[c]) for c in names]
+    cols = np.stack([np.asarray(tbl[c], np.float32) for c in names])
+    return range_mask(cols,
+                      np.asarray([b[0] for b in bounds], np.float32),
+                      np.asarray([b[1] for b in bounds], np.float32))
+
+
+# ---------------------------------------------------------------------------
+# the one per-group pipeline
+# ---------------------------------------------------------------------------
+
+
+def execute_group(reader: "BullionReader", group: int, *,
+                  columns: Sequence[str] = (),
+                  predicate: Optional[Predicate] = None,
+                  rows: Optional[np.ndarray] = None,
+                  drop_deleted: bool = True, dequant: bool = True,
+                  use_kernel: Optional[bool] = None) -> Optional[GroupResult]:
+    """Decode + filter one row group. Returns None when a predicate or a
+    row-id selection leaves no rows (payload pages are then never read).
+
+    Predicate columns are always evaluated in the dequantized (logical)
+    domain — the domain the zone maps describe; ``dequant`` governs only the
+    materialized payload. When the caller wants raw values of a predicate
+    column, it is re-read in the payload pass instead of served from the
+    evaluation copy.
+    """
+    fv = reader.footer
+    keep = group_keep(fv, group) if drop_deleted else None
+    space_raw = np.flatnonzero(keep) if keep is not None else None
+    n_space = len(space_raw) if space_raw is not None \
+        else raw_row_count(fv, group)
+
+    pred_cols = sorted(predicate.columns()) if predicate is not None else []
+    reuse = set(pred_cols) if dequant else set()
+    tbl: dict = {}
+    mask: Optional[np.ndarray] = None
+    if predicate is not None:
+        tbl = decode_group(reader, pred_cols, group,
+                           drop_deleted=drop_deleted, dequant=True)
+        if not drop_deleted:
+            # compact-deleted pages shrink the decoded array; re-align
+            # every predicate column to the raw row space first
+            tbl = {name: expand_raw(fv, group, name, vals)
+                   for name, vals in tbl.items()}
+        mask = eval_mask(predicate, tbl, use_kernel)
+    if rows is not None:
+        rmask = np.zeros(n_space, bool)
+        if space_raw is None:
+            rmask[rows[rows < n_space]] = True
+        else:
+            rmask[np.isin(space_raw, rows)] = True
+        mask = rmask if mask is None else mask & rmask
+
+    if mask is None:
+        local = np.arange(n_space)
+        full = True
+    else:
+        if not mask.any():
+            return None
+        local = np.flatnonzero(mask)
+        full = len(local) == n_space
+    raw_local = local if space_raw is None else space_raw[local]
+
+    out: dict = {}
+    for name in columns:
+        if name in reuse and name in tbl:
+            out[name] = tbl[name] if full else _take(tbl[name], local)
+    rest = [c for c in columns if c not in out]
+    if rest:
+        ptbl = decode_group(reader, rest, group,
+                            drop_deleted=drop_deleted, dequant=dequant)
+        # drop_deleted=False means *raw row space*, always: compact-deleted
+        # pages decode short, so every column is re-aligned (erased rows
+        # read 0) to keep row_ids and all columns the same length.
+        for name in rest:
+            vals = ptbl[name] if drop_deleted \
+                else expand_raw(fv, group, name, ptbl[name])
+            out[name] = vals if full else _take(vals, local)
+    return GroupResult(row_ids=raw_local, table=out)
+
+
+def truncate_result(res: GroupResult, n: int) -> GroupResult:
+    """Keep the first n rows of a group result (head limit)."""
+    return GroupResult(row_ids=res.row_ids[:n],
+                       table={k: v[:n] for k, v in res.table.items()})
+
+
+def _take(values, idx: np.ndarray):
+    if isinstance(values, np.ndarray):
+        return values[idx]
+    return [values[i] for i in idx]
+
+
+def _concat(parts):
+    if isinstance(parts[0], np.ndarray):
+        return np.concatenate(parts)
+    return [r for p in parts for r in p]

@@ -1,0 +1,169 @@
+"""Dataset sources: shard discovery, schema checking, reader lifecycle.
+
+A ``DataSource`` owns the ordered list of Bullion shards behind a dataset —
+one file, a directory of shards, a glob, or an explicit path list — plus the
+per-shard ``BullionReader`` handles. Shards are discovered and
+schema-checked at open time: every shard must agree with shard 0 on column
+names, kinds, and logical dtypes, so one plan executes unchanged over all
+of them. Global row ids are raw per-shard row ids offset by the cumulative
+row counts of the preceding shards (shard order = discovery order).
+"""
+
+from __future__ import annotations
+
+import glob as _glob
+import os
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from ..core.footer import MAGIC, FooterView, Sec, read_footer
+from ..core.reader import BullionReader, IOStats
+
+PathSpec = Union[str, Sequence[str]]
+
+
+class SchemaMismatchError(ValueError):
+    """A shard disagrees with the dataset schema (names/kinds/dtypes)."""
+
+
+def _is_bullion(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            f.seek(-8, 2)
+            return f.read(8) == MAGIC
+    except OSError:
+        return False
+
+
+def discover(spec: PathSpec) -> list[str]:
+    """Resolve a path / directory / glob / explicit list into shard paths."""
+    if not isinstance(spec, str):
+        paths = [str(p) for p in spec]
+        if not paths:
+            raise FileNotFoundError("empty dataset path list")
+        return paths
+    if os.path.isdir(spec):
+        paths = sorted(os.path.join(spec, n) for n in os.listdir(spec)
+                       if os.path.isfile(os.path.join(spec, n)))
+        paths = [p for p in paths if _is_bullion(p)]
+        if not paths:
+            raise FileNotFoundError(f"no Bullion shards in directory {spec!r}")
+        return paths
+    if any(ch in spec for ch in "*?["):
+        matched = sorted(_glob.glob(spec))
+        paths = [p for p in matched if _is_bullion(p)]
+        if not paths:
+            raise FileNotFoundError(
+                f"glob {spec!r} matched no Bullion files "
+                f"({len(matched)} non-Bullion match(es) skipped)")
+        return paths
+    return [spec]
+
+
+def _schema_sig(fv: FooterView):
+    return (tuple(fv.column_names()),
+            tuple(fv.arr(Sec.COL_KIND, np.uint8).tolist()),
+            tuple(fv.arr(Sec.COL_LOGICAL, np.uint8).tolist()))
+
+
+class DataSource:
+    """Ordered shards + lazy readers + global row-offset map."""
+
+    def __init__(self, paths: Sequence[str], *,
+                 readers: Optional[Sequence[BullionReader]] = None,
+                 owns_readers: bool = True):
+        self.paths = list(paths)
+        self.owns_readers = owns_readers
+        self._readers: list[Optional[BullionReader]] = \
+            list(readers) if readers is not None else [None] * len(self.paths)
+        self._retired: list[IOStats] = []
+        # read every footer now — schema mismatches surface at dataset()
+        # time, not deep inside a scan — but hold no file handles: planning
+        # is footer-only, and readers open lazily per shard on first data
+        # access (a 10k-shard dataset must not pin 10k descriptors). The
+        # parsed footers are handed to those readers so metadata is read
+        # exactly once per shard.
+        self._foots: list[tuple[FooterView, int]] = \
+            [(r.footer, r.footer_offset) if r is not None
+             else read_footer(p) for r, p in zip(self._readers, self.paths)]
+        self._footers = [f for f, _ in self._foots]
+        self._sig = _schema_sig(self._footers[0])
+        self.column_names: list[str] = list(self._sig[0])
+        self.column_set = frozenset(self.column_names)
+        offsets = [0]
+        for i, fv in enumerate(self._footers):
+            if i and _schema_sig(fv) != self._sig:
+                raise SchemaMismatchError(
+                    f"shard {self.paths[i]!r} schema {_schema_sig(fv)[0]} "
+                    f"does not match shard {self.paths[0]!r} schema "
+                    f"{self._sig[0]} (column names, kinds, and logical "
+                    "dtypes must agree across a dataset)")
+            offsets.append(offsets[-1] + fv.num_rows)
+        self._row_offsets = np.asarray(offsets, np.int64)
+
+    @classmethod
+    def from_reader(cls, reader: BullionReader) -> "DataSource":
+        """Wrap an already-open reader (legacy shims). Not owned: closing
+        the dataset leaves the caller's reader open."""
+        return cls([reader.path], readers=[reader], owns_readers=False)
+
+    # -- shards -----------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.paths)
+
+    def reader(self, shard: int) -> BullionReader:
+        """Open (or reuse) the shard's data reader — first data access.
+        Reuses the footer parsed at discovery time (no second parse)."""
+        r = self._readers[shard]
+        if r is None:
+            r = self._readers[shard] = \
+                BullionReader(self.paths[shard], footer=self._foots[shard])
+        return r
+
+    def footer(self, shard: int) -> FooterView:
+        """Footer-only access: never opens a file handle."""
+        r = self._readers[shard]
+        return r.footer if r is not None else self._footers[shard]
+
+    def row_offset(self, shard: int) -> int:
+        return int(self._row_offsets[shard])
+
+    @property
+    def num_rows(self) -> int:
+        return int(self._row_offsets[-1])
+
+    def credit_pruned(self, nbytes: int) -> None:
+        """Account plan-proven avoided I/O without opening any reader.
+        For a borrowed reader (legacy shims), the credit must land on the
+        caller's IOStats — this source is discarded right after the call."""
+        if not self.owns_readers:
+            self._readers[0].stats.bytes_pruned += int(nbytes)
+        else:
+            self._retired.append(IOStats(bytes_pruned=int(nbytes)))
+
+    # -- lifecycle --------------------------------------------------------------
+    def close(self) -> None:
+        """Close owned readers (idempotent). Their I/O accounting is retired
+        into ``stats`` so aggregates survive the handles."""
+        if not self.owns_readers:
+            return
+        for i, r in enumerate(self._readers):
+            if r is not None:
+                self._retired.append(r.stats)
+                r.close()
+                self._readers[i] = None
+
+    @property
+    def stats(self) -> IOStats:
+        """Aggregate IOStats across live and retired shard readers."""
+        total = IOStats()
+        for st in (*self._retired,
+                   *(r.stats for r in self._readers if r is not None)):
+            total.preads += st.preads
+            total.bytes_read += st.bytes_read
+            total.footer_bytes += st.footer_bytes
+            total.metadata_seconds += st.metadata_seconds
+            total.bytes_pruned += st.bytes_pruned
+        return total

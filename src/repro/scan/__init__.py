@@ -27,18 +27,20 @@ Layout:
   predicate.py  — predicate AST (Cmp/In/And/Or/Not), ``C`` builder,
                   vectorized NumPy evaluator, sound three-valued zone-map
                   tests, and compilation to conjunctive ranges
-  scanner.py    — ScanPlan/Scanner: group pruning, two-phase
-                  predicate-then-payload reads, Pallas-backed batch filter
+  scanner.py    — ScanPlan/Scanner: group pruning with page/byte accounting;
+                  execution delegates to the unified ``repro.dataset``
+                  pipeline (two-phase predicate-then-payload reads, Pallas
+                  batch filter) — see ``repro.dataset.executor``
 """
 
 from .predicate import (And, C, Cmp, In, Not, Or, Predicate,
                         conjunctive_ranges, evaluate)
-from .scanner import ScanBatch, ScanPlan, Scanner
+from .scanner import ScanBatch, ScanPlan, Scanner, plan_scan
 from .stats import (HAS_MINMAX, LIST_ELEMENTS, STAT_DTYPE, merge_records,
                     stats_record)
 
 __all__ = [
     "And", "C", "Cmp", "In", "Not", "Or", "Predicate", "conjunctive_ranges",
-    "evaluate", "ScanBatch", "ScanPlan", "Scanner", "HAS_MINMAX",
+    "evaluate", "ScanBatch", "ScanPlan", "Scanner", "plan_scan", "HAS_MINMAX",
     "LIST_ELEMENTS", "STAT_DTYPE", "merge_records", "stats_record",
 ]

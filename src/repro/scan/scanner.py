@@ -1,18 +1,15 @@
-"""Statistics-driven pruning scanner.
+"""Statistics-driven pruning scanner: the planning half of the scan path.
 
-The scan pipeline per row group:
+``Scanner.plan`` intersects a predicate with the file's chunk zone maps
+(``Sec.CHUNK_STATS``): groups that provably contain no matching row are
+pruned before any data pread, and the plan accounts the pages and bytes
+those groups would have cost. On stat-less (v0) files every group survives
+and the scan degrades to a plain filtered read.
 
-  1. **Prune** — intersect the predicate with the group's chunk zone maps
-     (``Sec.CHUNK_STATS``). Groups that provably contain no matching row are
-     skipped before any data pread; on stat-less (v0) files every group
-     survives and the scan degrades to a plain filtered read.
-  2. **Filter** — decode only the *predicate* columns of surviving groups and
-     evaluate the predicate. Conjunctive range predicates over float32
-     columns dispatch to the Pallas batch filter kernel
-     (``repro.kernels.filter``); everything else takes the vectorized NumPy
-     path. Groups where no row survives never read their payload columns.
-  3. **Project** — decode the requested payload columns and gather the
-     surviving rows.
+Execution — decode, deletion-masking, dequantization, predicate filtering,
+payload gathering — lives in ``repro.dataset.executor.execute_group``, the
+single pipeline shared with the lazy ``Dataset`` API; ``Scanner.scan`` is a
+thin per-group loop over it kept for direct (single-file, eager) use.
 
 Row ids are reported in the file's *raw* row space (deletion vectors do not
 renumber rows), which is what ``core.deletion`` consumes for predicate-based
@@ -27,7 +24,7 @@ from typing import TYPE_CHECKING, Iterator, Optional, Sequence
 import numpy as np
 
 from ..core.footer import Sec
-from .predicate import Predicate, conjunctive_ranges, evaluate
+from .predicate import Predicate
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from ..core.reader import BullionReader
@@ -41,6 +38,10 @@ class ScanPlan:
     pruned_groups: list[int]              # provably-empty row groups
     pages_pruned: int = 0                 # page reads avoided by pruning
     pages_total: int = 0                  # page reads a full scan would issue
+    bytes_pruned: int = 0                 # data bytes those pages hold
+    bytes_total: int = 0
+    group_pages: dict = field(default_factory=dict)   # group -> page count
+    group_bytes: dict = field(default_factory=dict)   # group -> data bytes
 
     @property
     def selectivity_bound(self) -> float:
@@ -57,18 +58,49 @@ class ScanBatch:
     table: dict = field(default_factory=dict)
 
 
-def _f32_shrink(lo: float, hi: float) -> tuple[np.float32, np.float32]:
-    """Tightest float32 interval inside the float64 one.
+def _group_stats(fv, group: int, cols: Sequence[str]) -> dict:
+    """Map column name -> chunk STAT record (or None on v0 files)."""
+    chunk = fv.chunk_stats()
+    if chunk is None:
+        return {name: None for name in cols}
+    n_cols = fv.n_cols
+    return {name: chunk[group * n_cols + fv.column_index(name)]
+            for name in cols}
 
-    Exact for float32 column data: a float32 x satisfies lo <= x <= hi iff
-    it satisfies the shrunk float32 bounds.
-    """
-    lo32, hi32 = np.float32(lo), np.float32(hi)
-    if np.float64(lo32) < lo:
-        lo32 = np.nextafter(lo32, np.float32(np.inf), dtype=np.float32)
-    if np.float64(hi32) > hi:
-        hi32 = np.nextafter(hi32, np.float32(-np.inf), dtype=np.float32)
-    return lo32, hi32
+
+def _pages_for(fv, group: int, cols: Sequence[str]) -> list[int]:
+    out: list[int] = []
+    for name in cols:
+        s, e = fv.chunk_pages(group, fv.column_index(name))
+        out.extend(range(s, e))
+    return out
+
+
+def plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
+              groups: Optional[Sequence[int]] = None) -> ScanPlan:
+    """Footer-only zone-map planning (needs no open file handle):
+    intersect ``pred`` with the chunk zone maps and account the page/byte
+    cost of every candidate group. ``pred=None`` prunes nothing."""
+    pred_cols = sorted(pred.columns()) if pred is not None else []
+    read_cols = list(dict.fromkeys([*pred_cols, *columns]))
+    candidates = list(groups) if groups is not None \
+        else list(range(fv.n_groups))
+    page_size = fv.arr(Sec.PAGE_SIZE, np.uint64)
+    plan = ScanPlan(groups=[], pruned_groups=[])
+    for g in candidates:
+        pages = _pages_for(fv, g, read_cols)
+        nbytes = int(sum(int(page_size[p]) for p in pages))
+        plan.pages_total += len(pages)
+        plan.bytes_total += nbytes
+        plan.group_pages[g] = len(pages)
+        plan.group_bytes[g] = nbytes
+        if pred is None or pred.maybe_any(_group_stats(fv, g, pred_cols)):
+            plan.groups.append(g)
+        else:
+            plan.pruned_groups.append(g)
+            plan.pages_pruned += len(pages)
+            plan.bytes_pruned += nbytes
+    return plan
 
 
 class Scanner:
@@ -76,99 +108,23 @@ class Scanner:
         self.reader = reader
         self.fv = reader.footer
 
-    # -- zone-map access --------------------------------------------------------
-    def _group_stats(self, group: int, cols: Sequence[str]) -> dict:
-        """Map column name -> chunk STAT record (or None on v0 files)."""
-        chunk = self.fv.chunk_stats()
-        if chunk is None:
-            return {name: None for name in cols}
-        n_cols = self.fv.n_cols
-        return {name: chunk[group * n_cols + self.fv.column_index(name)]
-                for name in cols}
+    def __enter__(self) -> "Scanner":
+        return self
 
-    def _pages_for(self, group: int, cols: Sequence[str]) -> list[int]:
-        out: list[int] = []
-        for name in cols:
-            s, e = self.fv.chunk_pages(group, self.fv.column_index(name))
-            out.extend(range(s, e))
-        return out
+    def __exit__(self, *exc) -> None:
+        # The scanner context owns the reader's handle: exiting closes it
+        # (idempotent), so ``with Scanner(BullionReader(p)) as s:`` cannot
+        # leak on an aborted scan. Don't enter a scanner context when the
+        # reader must outlive it — close() is shared with the reader.
+        self.reader.close()
 
     # -- planning ---------------------------------------------------------------
-    def plan(self, pred: Predicate, columns: Sequence[str] = (),
+    def plan(self, pred: Optional[Predicate], columns: Sequence[str] = (),
              groups: Optional[Sequence[int]] = None) -> ScanPlan:
-        """Zone-map pruning: decide which row groups can possibly match."""
-        pred_cols = sorted(pred.columns())
-        read_cols = list(dict.fromkeys([*pred_cols, *columns]))
-        candidates = list(groups) if groups is not None \
-            else list(range(self.fv.n_groups))
-        plan = ScanPlan(groups=[], pruned_groups=[])
-        for g in candidates:
-            n_pages = len(self._pages_for(g, read_cols))
-            plan.pages_total += n_pages
-            if pred.maybe_any(self._group_stats(g, pred_cols)):
-                plan.groups.append(g)
-            else:
-                plan.pruned_groups.append(g)
-                plan.pages_pruned += n_pages
-        return plan
-
-    # -- filtering --------------------------------------------------------------
-    def _group_keep(self, group: int, col: int = 0) -> Optional[np.ndarray]:
-        """Raw-row keep mask from deletion vectors (None = nothing deleted)."""
-        s, e = self.fv.chunk_pages(group, col)
-        page_rows = self.fv.arr(Sec.PAGE_ROWS, np.uint32)
-        parts, any_dv = [], False
-        for p in range(s, e):
-            dv = self.fv.deletion_vector(p)
-            if dv is None:
-                parts.append(np.ones(int(page_rows[p]), bool))
-            else:
-                parts.append(~dv)
-                any_dv = True
-        return np.concatenate(parts) if any_dv else None
-
-    def _expand_raw(self, group: int, name: str, values):
-        """Re-align a drop_deleted=False column to the raw row space.
-
-        Compact-deleted pages (§2.1 RLE rule) physically remove rows, so the
-        decoded array is shorter than the group's raw row count and indices
-        would otherwise shift. Erased positions read as 0 — the same value
-        in-place masking writes — and zone maps of every touched page were
-        already widened to include 0, so pruning stays consistent."""
-        if not isinstance(values, np.ndarray):
-            return values
-        rows = int(self.fv.arr(Sec.ROWS_PER_GROUP, np.uint32)[group])
-        if len(values) >= rows:
-            return values[:rows]
-        keep = self._group_keep(group, self.fv.column_index(name))
-        out = np.zeros(rows, values.dtype)
-        out[np.flatnonzero(keep)] = values
-        return out
-
-    def _eval(self, pred: Predicate, tbl: dict,
-              use_kernel: Optional[bool]) -> np.ndarray:
-        """Predicate -> row mask; Pallas kernel when the predicate compiles
-        to conjunctive ranges over float32 columns (exact there), NumPy
-        otherwise."""
-        ranges = conjunctive_ranges(pred)
-        kernel_ok = ranges is not None and all(
-            isinstance(tbl[c], np.ndarray) and tbl[c].dtype == np.float32
-            for c in ranges)
-        if use_kernel and not kernel_ok:
-            raise ValueError(
-                "kernel filter path requires a conjunctive range predicate "
-                "over float32 columns")
-        if use_kernel is None:
-            use_kernel = kernel_ok
-        if not use_kernel:
-            return evaluate(pred, tbl)
-        from ..kernels.filter import range_mask
-        names = list(ranges)
-        bounds = [_f32_shrink(*ranges[c]) for c in names]
-        cols = np.stack([np.asarray(tbl[c], np.float32) for c in names])
-        return range_mask(cols,
-                          np.asarray([b[0] for b in bounds], np.float32),
-                          np.asarray([b[1] for b in bounds], np.float32))
+        """Zone-map pruning: decide which row groups can possibly match.
+        ``pred=None`` plans an unpruned scan (all candidates survive) but
+        still accounts per-group page/byte costs for downstream planning."""
+        return plan_scan(self.fv, pred, columns, groups)
 
     # -- scanning ---------------------------------------------------------------
     def scan(self, pred: Predicate, columns: Sequence[str] = (),
@@ -182,49 +138,20 @@ class Scanner:
         requested). Payload pages are only read for groups where at least one
         row survived the filter — the second half of the I/O win.
         """
-        pred_cols = sorted(pred.columns())
-        # predicate columns are always evaluated in the dequantized (logical)
-        # domain — the domain the zone maps describe; the caller's ``dequant``
-        # flag governs only the materialized payload. When the caller wants
-        # raw (dequant=False) values of a predicate column, it is re-read in
-        # the payload pass rather than served from the evaluation copy.
-        reuse = set(pred_cols) if dequant else set()
-        payload = [c for c in columns if c not in reuse]
+        from ..dataset.executor import execute_group
+        from ..dataset.plan import group_bounds
+
         plan = self.plan(pred, columns, groups)
-        rpg = self.fv.arr(Sec.ROWS_PER_GROUP, np.uint32).astype(np.int64)
-        bounds = np.concatenate([[0], np.cumsum(rpg)])
+        self.reader.stats.bytes_pruned += plan.bytes_pruned
+        bounds = group_bounds(self.fv)
         for g in plan.groups:
-            (tbl,) = self.reader.project(pred_cols, groups=[g],
-                                         drop_deleted=drop_deleted,
-                                         dequant=True)
-            if not drop_deleted:
-                # compact-deleted pages shrink the decoded array; re-align
-                # every predicate column to the raw row space first
-                tbl = {name: self._expand_raw(g, name, vals)
-                       for name, vals in tbl.items()}
-            mask = self._eval(pred, tbl, use_kernel)
-            if not mask.any():
+            res = execute_group(self.reader, g, columns=columns,
+                                predicate=pred, drop_deleted=drop_deleted,
+                                dequant=dequant, use_kernel=use_kernel)
+            if res is None:
                 continue
-            local = np.flatnonzero(mask)
-            if drop_deleted:
-                keep = self._group_keep(g)
-                raw_local = local if keep is None \
-                    else np.flatnonzero(keep)[local]
-            else:
-                raw_local = local
-            batch = ScanBatch(group=g, row_ids=bounds[g] + raw_local)
-            for name in columns:
-                if name in reuse:
-                    batch.table[name] = _take(tbl[name], local)
-            if payload:
-                (ptbl,) = self.reader.project(payload, groups=[g],
-                                              drop_deleted=drop_deleted,
-                                              dequant=dequant)
-                for name in payload:
-                    vals = ptbl[name] if drop_deleted \
-                        else self._expand_raw(g, name, ptbl[name])
-                    batch.table[name] = _take(vals, local)
-            yield batch
+            yield ScanBatch(group=g, row_ids=bounds[g] + res.row_ids,
+                            table=res.table)
 
     def find_rows(self, pred: Predicate, *, drop_deleted: bool = False,
                   use_kernel: Optional[bool] = None) -> np.ndarray:
@@ -233,9 +160,3 @@ class Scanner:
                                               use_kernel=use_kernel)]
         return np.concatenate(parts) if parts \
             else np.zeros(0, np.int64)
-
-
-def _take(values, idx: np.ndarray):
-    if isinstance(values, np.ndarray):
-        return values[idx]
-    return [values[i] for i in idx]
