@@ -1,0 +1,134 @@
+"""Materialization-sink benchmark: compaction, purge, recluster.
+
+Writes an *unclustered* dataset (shuffled ids — zone maps can prove nothing),
+deletes ~10% of rows with deletion vectors only (merge-on-read: bytes stay on
+disk), then drives ``Dataset.write_to``:
+
+* compaction throughput (rows/s) for the streaming rewrite,
+* on-disk size before vs after the physical purge,
+* pre/post-recluster plan-proven ``pruned_bytes`` on the paper benchmark's
+  0.0015%-selectivity point probe (one id out of 65536): the sort_by rewrite
+  is what turns zone maps from useless to near-perfect on the probe column,
+* parallel (``parallelism=4``) vs serial rewrite equivalence.
+
+``BULLION_BENCH_SMOKE=1`` shrinks the dataset for CI smoke runs (same code
+path, same CSV schema, smaller constants).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BullionWriter, ColumnSpec, Compliance, delete_rows, \
+    verify_deleted
+from repro.dataset import dataset
+from repro.scan import C
+
+SMOKE = bool(os.environ.get("BULLION_BENCH_SMOKE"))
+
+
+def _write_unclustered(path: str, n_rows: int, rows_per_group: int,
+                       seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(n_rows).astype(np.int64)
+    w = BullionWriter(path, [
+        ColumnSpec("id", "int64"),
+        ColumnSpec("quality", "float32"),
+        ColumnSpec("payload", "float32"),
+    ], rows_per_group=rows_per_group)
+    w.write_table({
+        "id": ids,
+        "quality": rng.random(n_rows).astype(np.float32),
+        "payload": rng.normal(size=n_rows).astype(np.float32),
+    })
+    w.close()
+    return ids
+
+
+def run(report):
+    n_rows = 8192 if SMOKE else 65536
+    rows_per_group = 512
+    victim = n_rows // 3                      # survives the delete below
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "hot.bln")
+        ids = _write_unclustered(path, n_rows, rows_per_group)
+
+        # merge-on-read delete of ~10%: DVs only, data still on disk
+        erased = np.arange(n_rows - n_rows // 10, n_rows)
+        delete_rows(path, np.flatnonzero(np.isin(ids, erased)),
+                    level=Compliance.LEVEL1)
+        size_before = os.path.getsize(path)
+        audit = verify_deleted(path, "id", erased)
+        assert audit["raw_occurrences"] > 0, "L1 delete must leave raw bytes"
+
+        # unclustered probe: the zone maps can prune (almost) nothing
+        with dataset(path) as ds:
+            pre = ds.where(C("id") == victim).select(["payload"]) \
+                .physical_plan()
+
+        # compact + recluster: purge DV rows, sort by id, re-encode
+        out = os.path.join(td, "compacted")
+        t0 = time.perf_counter()
+        with dataset(path) as ds:
+            res = ds.write_to(out, shard_rows=n_rows // 4, sort_by="id")
+        t_compact = time.perf_counter() - t0
+
+        report("compact/rows_per_s", res.rows / max(t_compact, 1e-9),
+               f"{res.rows} rows -> {res.shards} shard(s) "
+               f"in {t_compact * 1e3:.0f}ms")
+        report("compact/size_purge_ratio",
+               size_before / max(res.bytes_written, 1),
+               f"{size_before}B (10% DV-deleted) -> {res.bytes_written}B "
+               "after physical purge")
+
+        # compliance: the purge physically erased every DV'd row
+        for p in res.paths:
+            a = verify_deleted(p, "id", erased)
+            assert a["raw_occurrences"] == 0 and a["visible_rows"] == 0, \
+                f"purge left deleted rows in {p}: {a}"
+
+        # recluster: the same 0.0015%-selectivity probe now prunes
+        with dataset(out) as ds:
+            q = ds.where(C("id") == victim).select(["payload"])
+            post = q.physical_plan()
+            got = q.to_table()["payload"]
+        with dataset(path) as ds:
+            expect = ds.where(C("id") == victim).select(["payload"]) \
+                .to_table()["payload"]
+        assert np.array_equal(got, expect), "recluster changed the result"
+        assert post.bytes_pruned > pre.bytes_pruned, \
+            "sort_by must strictly improve pruning on the probe column"
+        report("compact/probe_pruned_bytes_post_recluster", post.bytes_pruned,
+               f"{post.groups_pruned}/{post.groups_total} groups pruned "
+               f"(was {pre.groups_pruned}/{pre.groups_total} unclustered)",
+               pruned_bytes=post.bytes_pruned)
+        report("compact/probe_pruned_gain",
+               post.bytes_pruned / max(pre.bytes_pruned, 1),
+               f"{pre.bytes_pruned}B -> {post.bytes_pruned}B plan-proven "
+               "prunable on the point probe")
+
+        # parallel rewrite: identical output tables, wall-clock comparison
+        out_par = os.path.join(td, "compacted_par")
+        t0 = time.perf_counter()
+        with dataset(path) as ds:
+            res_par = ds.write_to(out_par, shard_rows=n_rows // 4,
+                                  sort_by="id", parallelism=4)
+        t_par = time.perf_counter() - t0
+        with dataset(out) as a, dataset(out_par) as b:
+            ta, tb = a.to_table(), b.to_table()
+            assert all(np.array_equal(ta[k], tb[k]) for k in ta), \
+                "parallel rewrite diverged from serial"
+        assert res_par.rows == res.rows
+        # determinism is the contract; wall-clock parity is workload-bound.
+        # On a hot page cache the decode path is GIL-bound, so this ratio
+        # hovers near/below 1 — the pool's payoff is I/O-latency-bound
+        # storage (cold files, network filesystems), which a tmpfs
+        # microbenchmark cannot show. Tracked so regressions in pool
+        # overhead still surface in the trajectory.
+        report("compact/parallel_rewrite_ratio", t_compact / max(t_par, 1e-9),
+               f"serial {t_compact * 1e3:.0f}ms vs parallelism=4 "
+               f"{t_par * 1e3:.0f}ms, identical output")

@@ -6,7 +6,10 @@ admits it: preads, bytes, and latency all collapse versus the full-column
 baseline, with *byte-identical* results (the PR-2 acceptance check). The
 same plan then runs unchanged over a 4-shard directory dataset. Also
 reports the quality-threshold read (§2.5) and the plan-proven pruned bytes
-now tracked in the ``pruned_bytes`` CSV column."""
+now tracked in the ``pruned_bytes`` CSV column.
+
+``BULLION_BENCH_SMOKE=1`` shrinks the dataset for CI smoke runs (same code
+path and CSV schema, smaller constants)."""
 
 from __future__ import annotations
 
@@ -43,11 +46,12 @@ def _write(path: str, n_rows: int, rows_per_group: int,
 
 
 def run(report):
+    smoke = bool(os.environ.get("BULLION_BENCH_SMOKE"))
     with tempfile.TemporaryDirectory() as td:
         path = os.path.join(td, "scan.bln")
-        n_rows, rows_per_group = 65536, 512
+        n_rows, rows_per_group = (8192 if smoke else 65536), 512
         _write(path, n_rows, rows_per_group, sort_by_quality=False)
-        victim = 12345
+        victim = n_rows // 5 - 1
 
         # baseline: legacy find_rows + project gather (full decode on v0-style
         # access: read, locate, re-read the matching group)

@@ -2,17 +2,30 @@
 # ``name,us_per_call,pruned_bytes,derived`` CSV; ``pruned_bytes`` is the
 # plan-proven avoided I/O (IOStats.bytes_pruned) so pruning regressions show
 # up in the perf trajectory, blank for suites where pruning doesn't apply.
+#
+# ``--only scan,compact`` restricts to matching suites (substring match on
+# the label or module name); ``BULLION_BENCH_SMOKE=1`` makes the suites that
+# honor it (scan, compact) shrink their datasets — the CI smoke mode that
+# keeps the perf-trajectory CSV accumulating on every push.
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
-    from . import (bench_cascade, bench_deletion, bench_metadata,
-                   bench_multimodal, bench_projection, bench_quantization,
-                   bench_roofline, bench_scan, bench_sparse_delta)
+def main(argv=None) -> None:
+    from . import (bench_cascade, bench_compact, bench_deletion,
+                   bench_metadata, bench_multimodal, bench_projection,
+                   bench_quantization, bench_roofline, bench_scan,
+                   bench_sparse_delta)
+
+    ap = argparse.ArgumentParser(description="Bullion benchmark suites")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings; run only suites whose "
+                         "label or module matches (e.g. --only scan,compact)")
+    args = ap.parse_args(argv)
 
     rows: list[tuple[str, float, str, str]] = []
 
@@ -32,8 +45,15 @@ def main() -> None:
         ("cascade   (§2.6, Table 2)", bench_cascade),
         ("projection (§2.3, Table 1)", bench_projection),
         ("scan      (zone maps / pushdown)", bench_scan),
+        ("compact   (write_to sink / recluster)", bench_compact),
         ("roofline  (dry-run artifacts)", bench_roofline),
     ]
+    if args.only:
+        keys = [k.strip() for k in args.only.split(",") if k.strip()]
+        suites = [(label, mod) for label, mod in suites
+                  if any(k in label or k in mod.__name__ for k in keys)]
+        if not suites:
+            sys.exit(f"--only {args.only!r} matched no suites")
     failures = 0
     for label, mod in suites:
         t0 = time.time()

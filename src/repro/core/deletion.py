@@ -233,22 +233,20 @@ def _rebuild_footer(fv: FooterView, dvs: dict[int, np.ndarray],
     return fb.build()
 
 
-def delete_where(path: str, predicate,
+def delete_where(path, predicate,
                  level: Compliance = Compliance.LEVEL2) -> DeleteStats:
     """Predicate-based delete: erase every row matching a ``repro.scan``
     predicate (e.g. ``C("user_id") == victim``).
 
-    Victim rows are located through a raw-row-space Dataset plan, so on
-    files with zone maps only the row groups whose statistics admit a match
-    are read — a compliance delete of one user touches a handful of groups
-    instead of decoding the whole column."""
+    ``path`` accepts anything ``dataset()`` opens — one file, a shard
+    directory, a glob, or a path list. Victim rows are located through a
+    raw-row-space Dataset plan, so on files with zone maps only the row
+    groups whose statistics admit a match are read; on multi-shard datasets
+    the global row ids are translated to each shard's local raw row space
+    and only the affected shards are rewritten (``Dataset.delete_where``)."""
     from ..dataset import dataset
 
-    with dataset(path) as ds:
-        rows = ds.where(predicate).drop_deleted(False).row_ids()
-    if len(rows) == 0:
-        return DeleteStats()
-    return delete_rows(path, rows, level)
+    return dataset(path).delete_where(predicate, level)
 
 
 def verify_deleted(path: str, column: str, forbidden_values) -> dict:

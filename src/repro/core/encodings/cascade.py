@@ -74,6 +74,42 @@ def _objective(enc: Encoding, sample: np.ndarray, ctx: EncodeContext) -> Optiona
             + ctx.weights.decode_time * t_dec)
 
 
+def advise_candidates(rec, n: int, dtype) -> Optional[tuple[str, ...]]:
+    """LEA-style statistics-driven candidate restriction.
+
+    ``rec`` is a zone-map record (``scan.stats.STAT_DTYPE``: min/max/
+    null_count/distinct — exactly the features LEA trains its advisor on).
+    Where the statistics already determine the encoding family, the cascade
+    skips sampling trials of encodings they rule out; returns None when the
+    stats don't discriminate (full sampling-based selection). Sound either
+    way — selection quality, never correctness, is at stake.
+    """
+    if rec is None or n == 0:
+        return None
+    from ...scan.stats import HAS_MINMAX
+    if not int(rec["flags"]) & HAS_MINMAX:
+        return None
+    distinct = int(rec["distinct"])
+    if distinct <= 1 and not int(rec["null_count"]):
+        return ("constant", "rle", "trivial")
+    if distinct and distinct <= max(16, n // 256):
+        # run/dictionary territory: skip bit-width and float-codec trials
+        return ("constant", "rle", "dictionary", "mainly_constant", "for",
+                "fixed_bit_width", "trivial")
+    if np.dtype(dtype).kind in "iu":
+        span = float(rec["max"]) - float(rec["min"])
+        if span < float(2 ** 20):
+            if distinct >= n:
+                # all-unique narrow range (ids, timestamps): run and
+                # dictionary structure is provably absent — bit-level codecs
+                return ("bitshuffle", "for", "fixed_bit_width", "varint",
+                        "chunked", "trivial")
+            # narrow integer range: frame-of-reference / bit-packing family
+            return ("for", "fixed_bit_width", "rle", "dictionary", "varint",
+                    "trivial")
+    return None
+
+
 def choose_encoding(arr: np.ndarray, ctx: Optional[EncodeContext] = None) -> str:
     ctx = ctx or EncodeContext()
     sample = _sample(arr, ctx)
@@ -120,4 +156,5 @@ def encode_bytes(data: bytes, ctx: Optional[EncodeContext] = None) -> bytes:
     return best_blob
 
 
-__all__ = ["encode_array", "encode_bytes", "choose_encoding", "decode_blob"]
+__all__ = ["advise_candidates", "encode_array", "encode_bytes",
+           "choose_encoding", "decode_blob"]

@@ -26,13 +26,20 @@ def build_scalar_page(arr: np.ndarray, ctx: EncodeContext) -> bytes:
 
 def build_list_page(rows: list[np.ndarray], ctx: EncodeContext,
                     use_sparse_delta: bool = False) -> tuple[bytes, PageType]:
-    if use_sparse_delta:
-        return sparse_delta.encode_page(rows, ctx), PageType.SPARSE_DELTA
     lens = np.asarray([len(r) for r in rows], np.int64)
     offsets = np.concatenate([[0], np.cumsum(lens)])
     values = np.concatenate(rows) if rows else np.zeros(0, np.int64)
     blob = _cat(encode_array(offsets, ctx.child()), encode_array(values, ctx.child()))
-    return struct.pack("<Q", len(rows)) + blob, PageType.LIST
+    plain = struct.pack("<Q", len(rows)) + blob
+    if use_sparse_delta:
+        # §2.2 sliding-window deltas pay off only when adjacent rows share
+        # window content (write-order locality); on reordered/unrelated rows
+        # they degenerate, so ship whichever page is smaller — each page
+        # records its own type, so the choice is per chunk.
+        sd = sparse_delta.encode_page(rows, ctx)
+        if len(sd) < len(plain):
+            return sd, PageType.SPARSE_DELTA
+    return plain, PageType.LIST
 
 
 def build_string_page(strings: list[bytes], ctx: EncodeContext) -> bytes:

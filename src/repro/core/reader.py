@@ -16,6 +16,8 @@ the equivalent one-file plans.
 
 from __future__ import annotations
 
+import os
+import threading
 import time
 from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence
@@ -53,6 +55,7 @@ class BullionReader:
         self.stats.metadata_seconds = time.perf_counter() - t0
         self._f = open(path, "rb")
         self._scanner = None
+        self._stats_lock = threading.Lock()
 
     def close(self) -> None:
         """Idempotent: safe to call repeatedly (context-manager exits after
@@ -100,12 +103,17 @@ class BullionReader:
 
     # -- I/O ----------------------------------------------------------------------
     def _pread(self, offset: int, size: int) -> bytes:
-        if self._f is None:
+        """Positional read: ``os.pread`` never moves a shared file cursor,
+        so concurrent ScanTasks on the same shard (parallel execution) are
+        safe on one handle. Stats mutate under a lock for the same reason."""
+        f = self._f
+        if f is None:
             raise ValueError(f"{self.path}: reader is closed")
-        self._f.seek(offset)
-        self.stats.preads += 1
-        self.stats.bytes_read += size
-        return self._f.read(size)
+        data = os.pread(f.fileno(), size, offset)
+        with self._stats_lock:
+            self.stats.preads += 1
+            self.stats.bytes_read += size
+        return data
 
     def _read_pages(self, page_ids: Sequence[int]) -> dict[int, bytes]:
         """Coalesced ranged reads for a set of pages."""

@@ -4,12 +4,29 @@ Native write-time data organization (paper §2.5): row-wise sorting (e.g.
 quality-score descending for multimodal training data) and column-wise layout
 reordering (hot features adjacent for coalesced projection reads) are
 first-class, UDF-driven hooks — not a query-engine afterthought.
+
+Two buffering modes share one group-flush core:
+
+* **batch** (default) — ``write_table`` only buffers; ``close`` materializes
+  the whole table, applies the optional ``sort_udf``, and writes every group.
+* **stream** (``stream=True``) — every complete ``rows_per_group`` group is
+  encoded and written as soon as it fills, so a sink rewriting a dataset
+  holds at most one group per shard in memory. Whole-table ``sort_udf`` is
+  incompatible with streaming (sort upstream, e.g. ``Dataset.write_to``'s
+  ``sort_by=``).
+
+Encoding selection can be steered per chunk through ``encoding_advisor``: the
+zone-map statistics record (min/max/distinct — the LEA feature set) is
+computed *before* the page is encoded and handed to the advisor, which may
+restrict the cascade's candidate list (see ``encodings.cascade
+.advise_candidates``). The same record is then persisted in the footer, so
+stats are collected once and used twice.
 """
 
 from __future__ import annotations
 
 import struct
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -54,6 +71,9 @@ class ColumnSpec:
 
 SortUDF = Callable[[dict], np.ndarray]         # table -> row permutation
 ColumnOrderUDF = Callable[[list[str]], list[str]]  # names -> layout order
+# (stats record, n values, storage dtype) -> restricted candidate names
+EncodingAdvisor = Callable[[np.ndarray, int, np.dtype],
+                           Optional[tuple[str, ...]]]
 
 
 def quality_sort(column: str, descending: bool = True) -> SortUDF:
@@ -75,7 +95,9 @@ class BullionWriter:
                  column_order_udf: Optional[ColumnOrderUDF] = None,
                  encode_ctx: Optional[EncodeContext] = None,
                  props: Optional[dict[str, str]] = None,
-                 collect_stats: bool = True):
+                 collect_stats: bool = True,
+                 stream: bool = False,
+                 encoding_advisor: Optional[EncodingAdvisor] = None):
         self.path = path
         self.schema = list(schema)
         self.by_name = {s.name: s for s in self.schema}
@@ -96,8 +118,34 @@ class BullionWriter:
         # write-time zone-map statistics (scan subsystem). ``collect_stats=
         # False`` writes a v0 (stat-less) file — the backward-compat target.
         self.collect_stats = collect_stats
+        self.stream = stream
+        self.encoding_advisor = encoding_advisor
+        if stream and sort_udf is not None:
+            raise ValueError(
+                "stream=True flushes groups incrementally and cannot apply a "
+                "whole-table sort_udf; sort upstream (Dataset.write_to's "
+                "sort_by=) or use stream=False")
         self._buffers: dict[str, list] = {s.name: [] for s in self.schema}
         self._n_rows = 0
+        self._buffered = 0
+        # incremental file state, shared by both modes: stream flushes groups
+        # as they fill, batch flushes everything from close()
+        self._logical_idx = {s.name: i for i, s in enumerate(self.schema)}
+        self._f = None
+        self._layout: Optional[list[str]] = None
+        self._page_offset: list[int] = []
+        self._page_size: list[int] = []
+        self._page_rows: list[int] = []
+        self._page_cksum: list[int] = []
+        self._page_flags: list[int] = []
+        self._rows_per_group_arr: list[int] = []
+        self._page_stat_recs: list = []              # physical page order
+        self._chunk_stat_recs: dict[tuple[int, int], list] = {}
+        # page index per logical (group, col) chunk; with §2.5 layout
+        # reordering a group's pages aren't in logical order.
+        self._chunk_ranges: dict[tuple[int, int], tuple[int, int]] = {}
+        self._n_groups = 0
+        self._result: Optional[dict] = None   # close() is idempotent
 
     # -- buffering -------------------------------------------------------------
     def write_table(self, table: dict) -> None:
@@ -113,7 +161,12 @@ class BullionWriter:
                 self._buffers[spec.name].extend(data)
         if len(sizes) != 1:
             raise ValueError(f"ragged table: row counts {sizes}")
-        self._n_rows += sizes.pop()
+        n = sizes.pop()
+        self._n_rows += n
+        self._buffered += n
+        if self.stream:
+            while self._buffered >= self.rows_per_group:
+                self._flush_group(self.rows_per_group)
 
     def _collect(self, name: str):
         spec = self.by_name[name]
@@ -122,141 +175,191 @@ class BullionWriter:
                 else np.zeros(0, spec.value_dtype)
         return self._buffers[name]
 
-    # -- finalize ----------------------------------------------------------------
-    def close(self) -> dict:
-        table = {s.name: self._collect(s.name) for s in self.schema}
+    def _pop_rows(self, take: int) -> dict:
+        """Remove the first ``take`` buffered rows as one table. Consumes
+        whole buffered chunks and slices only at the group boundary, so each
+        flush costs O(take), not O(rows still buffered)."""
+        out: dict = {}
+        for s in self.schema:
+            buf = self._buffers[s.name]
+            if s.kind in (ColKind.SCALAR, ColKind.MEDIA_REF):
+                parts, got = [], 0
+                while got < take:
+                    head = buf[0]
+                    need = take - got
+                    if len(head) <= need:
+                        parts.append(buf.pop(0))
+                        got += len(head)
+                    else:
+                        parts.append(head[:need])
+                        buf[0] = head[need:]     # view, no copy
+                        got = take
+                out[s.name] = parts[0] if len(parts) == 1 else (
+                    np.concatenate(parts) if parts
+                    else np.zeros(0, s.value_dtype))
+            else:
+                out[s.name] = buf[:take]
+                del buf[:take]
+        self._buffered -= take
+        return out
 
-        # §2.5 write-path row reordering (quality sort etc.)
-        if self.sort_udf is not None and self._n_rows:
-            perm = self.sort_udf(table)
-            for s in self.schema:
-                data = table[s.name]
-                table[s.name] = data[perm] if isinstance(data, np.ndarray) \
-                    else [data[i] for i in perm]
+    # -- group flushing ----------------------------------------------------------
+    def _flush_group(self, take: int) -> None:
+        self._write_group(self._pop_rows(take), take)
 
-        # §2.5 column layout reordering (hot columns adjacent)
-        layout = [s.name for s in self.schema]
-        if self.column_order_udf is not None:
-            layout = self.column_order_udf(layout)
-            assert sorted(layout) == sorted(s.name for s in self.schema)
-
-        n_rows = self._n_rows
-        n_cols = len(self.schema)
-        n_groups = max(1, -(-n_rows // self.rows_per_group))
-
-        page_offset, page_size, page_rows, page_cksum, page_flags = [], [], [], [], []
-        rows_per_group_arr = []
-        page_stat_recs: list = []               # physical page order
-        chunk_stat_recs: dict[tuple[int, int], list] = {}
-
-        # schema order is the *logical* order; pages are laid out in `layout`
-        # order inside each group. chunk_page_start is indexed logically, so
-        # we collect per-(group, logical col) page ranges after writing.
-        chunk_ranges: dict[tuple[int, int], tuple[int, int]] = {}
-        logical_idx = {s.name: i for i, s in enumerate(self.schema)}
-
-        with open(self.path, "wb") as f:
-            for g in range(n_groups):
-                lo = g * self.rows_per_group
-                hi = min(lo + self.rows_per_group, n_rows)
-                rows_per_group_arr.append(hi - lo)
-                for name in layout:
-                    spec = self.by_name[name]
-                    data = table[name]
-                    chunk = data[lo:hi]
-                    blob, ptype, stored = self._build_page(spec, chunk)
-                    start_page = len(page_offset)
-                    page_offset.append(f.tell())
-                    page_size.append(len(blob))
-                    page_rows.append(hi - lo)
-                    page_cksum.append(page_hash(blob))
-                    page_flags.append(int(ptype))
-                    f.write(blob)
-                    chunk_ranges[(g, logical_idx[name])] = (start_page, len(page_offset))
-                    if self.collect_stats:
-                        rec = self._page_stats_record(spec, chunk, stored)
-                        page_stat_recs.append(rec)
-                        chunk_stat_recs.setdefault(
-                            (g, logical_idx[name]), []).append(rec)
-
-            # page index per logical (group, col) chunk; with §2.5 layout
-            # reordering a group's pages aren't in logical order.
-            starts = np.zeros(n_groups * n_cols, np.uint64)
-            for (g, c), (s, e) in chunk_ranges.items():
-                starts[g * n_cols + c] = s
-
-            n_pages = len(page_offset)
-            cksums = np.asarray(page_cksum, np.uint64)
-            # merkle over physical page order, grouped by row group
-            group_page_start = np.arange(0, n_pages + 1, n_cols, dtype=np.uint64)
-            tree = MerkleTree(cksums, group_page_start, n_groups, 1)
-
-            fb = FooterBuilder()
-            meta = np.zeros(8, np.uint64)
-            meta[0], meta[1], meta[2], meta[3] = n_rows, n_cols, n_groups, n_pages
-            meta[4] = self.rows_per_group
-            meta[5] = self.compliance
-            meta[6] = tree.root
-            meta[7] = FORMAT_VERSION if self.collect_stats else FORMAT_V0
-            fb.put(Sec.META, meta)
-
+    def _write_group(self, table: dict, n_rows: int) -> None:
+        if self._f is None:
+            self._f = open(self.path, "wb")
+            # §2.5 column layout reordering (hot columns adjacent)
+            layout = [s.name for s in self.schema]
+            if self.column_order_udf is not None:
+                layout = self.column_order_udf(layout)
+                assert sorted(layout) == sorted(s.name for s in self.schema)
+            self._layout = layout
+        g = self._n_groups
+        self._rows_per_group_arr.append(n_rows)
+        for name in self._layout:
+            spec = self.by_name[name]
+            blob, ptype, rec = self._build_page(spec, table[name])
+            start_page = len(self._page_offset)
+            self._page_offset.append(self._f.tell())
+            self._page_size.append(len(blob))
+            self._page_rows.append(n_rows)
+            self._page_cksum.append(page_hash(blob))
+            self._page_flags.append(int(ptype))
+            self._f.write(blob)
+            self._chunk_ranges[(g, self._logical_idx[name])] = \
+                (start_page, len(self._page_offset))
             if self.collect_stats:
-                from ..scan.stats import STAT_DTYPE, merge_records
-                page_stats = np.zeros(n_pages, STAT_DTYPE)
-                for i, rec in enumerate(page_stat_recs):
-                    page_stats[i] = rec
-                chunk_stats = np.zeros(n_groups * n_cols, STAT_DTYPE)
-                for (g, c), recs in chunk_stat_recs.items():
-                    chunk_stats[g * n_cols + c] = \
-                        recs[0] if len(recs) == 1 else merge_records(recs)
-                fb.put(Sec.PAGE_STATS, page_stats)
-                fb.put(Sec.CHUNK_STATS, chunk_stats)
+                self._page_stat_recs.append(rec)
+                self._chunk_stat_recs.setdefault(
+                    (g, self._logical_idx[name]), []).append(rec)
+        self._n_groups += 1
 
-            names = [s.name for s in self.schema]
-            name_bytes = b"".join(n.encode() for n in names)
-            offs = np.zeros(n_cols + 1, np.uint32)
-            np.cumsum([len(n.encode()) for n in names], out=offs[1:])
-            fb.put(Sec.NAMES_DATA, name_bytes)
-            fb.put(Sec.NAMES_OFFSETS, offs)
-            hashes = np.asarray([name_hash(n) for n in names], np.uint64)
-            order = np.argsort(hashes, kind="stable").astype(np.uint32)
-            fb.put(Sec.NAME_HASH_SORTED, hashes[order])
-            fb.put(Sec.NAME_HASH_ORDER, order)
+    # -- finalize ----------------------------------------------------------------
+    def abort(self) -> None:
+        """Drop an unfinished file: close the handle without writing a
+        footer (the partial file is not a valid Bullion shard). No-op after
+        a successful ``close()``."""
+        if self._result is None and self._f is not None:
+            self._f.close()
+            self._f = None
 
-            storage_codes, logical_codes, kinds = [], [], []
-            quant = np.zeros(n_cols, QUANT_DTYPE)
-            for i, s in enumerate(self.schema):
-                logical_codes.append(dtype_code(s.value_dtype))
-                sd = storage_dtype(s.quant.mode)
-                storage_codes.append(dtype_code(sd or s.value_dtype))
-                kinds.append(int(s.kind))
-                quant[i] = s.quant.to_record()
-            fb.put(Sec.COL_DTYPE, np.asarray(storage_codes, np.uint8))
-            fb.put(Sec.COL_LOGICAL, np.asarray(logical_codes, np.uint8))
-            fb.put(Sec.COL_KIND, np.asarray(kinds, np.uint8))
-            fb.put(Sec.QUANT_META, quant)
+    def close(self) -> dict:
+        if self._result is not None:
+            return self._result            # idempotent: the file is final
+        if self.stream:
+            while self._buffered >= self.rows_per_group:
+                self._flush_group(self.rows_per_group)
+            if self._buffered:
+                self._flush_group(self._buffered)
+        else:
+            table = {s.name: self._collect(s.name) for s in self.schema}
+            # §2.5 write-path row reordering (quality sort etc.)
+            if self.sort_udf is not None and self._n_rows:
+                perm = self.sort_udf(table)
+                for s in self.schema:
+                    data = table[s.name]
+                    table[s.name] = data[perm] \
+                        if isinstance(data, np.ndarray) \
+                        else [data[i] for i in perm]
+            self._buffers = {s.name: [] for s in self.schema}
+            self._buffered = 0
+            for lo in range(0, self._n_rows, self.rows_per_group):
+                hi = min(lo + self.rows_per_group, self._n_rows)
+                self._write_group({k: v[lo:hi] for k, v in table.items()},
+                                  hi - lo)
+        if self._n_groups == 0:
+            # zero-row file still carries one (empty) group so readers see a
+            # well-formed group/page structure
+            self._flush_group(0)
+        if self._f is None:  # pragma: no cover - _flush_group always opens
+            self._f = open(self.path, "wb")
 
-            fb.put(Sec.ROWS_PER_GROUP, np.asarray(rows_per_group_arr, np.uint32))
-            fb.put(Sec.CHUNK_PAGE_START, starts)
-            fb.put(Sec.PAGE_OFFSET, np.asarray(page_offset, np.uint64))
-            fb.put(Sec.PAGE_SIZE, np.asarray(page_size, np.uint64))
-            fb.put(Sec.PAGE_ROWS, np.asarray(page_rows, np.uint32))
-            fb.put(Sec.PAGE_CHECKSUM, cksums)
-            fb.put(Sec.PAGE_FLAGS, np.asarray(page_flags, np.uint8))
-            fb.put(Sec.DV_OFFSET, np.full(n_pages, 0xFFFFFFFFFFFFFFFF, np.uint64))
-            fb.put(Sec.DV_SIZE, np.zeros(n_pages, np.uint32))
-            fb.put(Sec.DV_DATA, b"")
-            fb.put(Sec.GROUP_CHECKSUM, tree.groups)
-            if self.props:
-                fb.put(Sec.PROPS, b"\x00".join(
-                    k.encode() + b"\x00" + v.encode() for k, v in self.props.items()) + b"\x00")
+        n_rows, n_cols = self._n_rows, len(self.schema)
+        n_groups, n_pages = self._n_groups, len(self._page_offset)
+        f = self._f
 
-            footer = fb.build()
-            f.write(footer)
-            f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        starts = np.zeros(n_groups * n_cols, np.uint64)
+        for (g, c), (s, e) in self._chunk_ranges.items():
+            starts[g * n_cols + c] = s
 
-        return {"rows": n_rows, "groups": n_groups, "pages": n_pages,
-                "file_checksum": tree.root}
+        cksums = np.asarray(self._page_cksum, np.uint64)
+        # merkle over physical page order, grouped by row group
+        group_page_start = np.arange(0, n_pages + 1, n_cols, dtype=np.uint64)
+        tree = MerkleTree(cksums, group_page_start, n_groups, 1)
+
+        fb = FooterBuilder()
+        meta = np.zeros(8, np.uint64)
+        meta[0], meta[1], meta[2], meta[3] = n_rows, n_cols, n_groups, n_pages
+        meta[4] = self.rows_per_group
+        meta[5] = self.compliance
+        meta[6] = tree.root
+        meta[7] = FORMAT_VERSION if self.collect_stats else FORMAT_V0
+        fb.put(Sec.META, meta)
+
+        if self.collect_stats:
+            from ..scan.stats import STAT_DTYPE, merge_records
+            page_stats = np.zeros(n_pages, STAT_DTYPE)
+            for i, rec in enumerate(self._page_stat_recs):
+                page_stats[i] = rec
+            chunk_stats = np.zeros(n_groups * n_cols, STAT_DTYPE)
+            for (g, c), recs in self._chunk_stat_recs.items():
+                chunk_stats[g * n_cols + c] = \
+                    recs[0] if len(recs) == 1 else merge_records(recs)
+            fb.put(Sec.PAGE_STATS, page_stats)
+            fb.put(Sec.CHUNK_STATS, chunk_stats)
+
+        names = [s.name for s in self.schema]
+        name_bytes = b"".join(n.encode() for n in names)
+        offs = np.zeros(n_cols + 1, np.uint32)
+        np.cumsum([len(n.encode()) for n in names], out=offs[1:])
+        fb.put(Sec.NAMES_DATA, name_bytes)
+        fb.put(Sec.NAMES_OFFSETS, offs)
+        hashes = np.asarray([name_hash(n) for n in names], np.uint64)
+        order = np.argsort(hashes, kind="stable").astype(np.uint32)
+        fb.put(Sec.NAME_HASH_SORTED, hashes[order])
+        fb.put(Sec.NAME_HASH_ORDER, order)
+
+        storage_codes, logical_codes, kinds = [], [], []
+        quant = np.zeros(n_cols, QUANT_DTYPE)
+        for i, s in enumerate(self.schema):
+            logical_codes.append(dtype_code(s.value_dtype))
+            sd = storage_dtype(s.quant.mode)
+            storage_codes.append(dtype_code(sd or s.value_dtype))
+            kinds.append(int(s.kind))
+            quant[i] = s.quant.to_record()
+        fb.put(Sec.COL_DTYPE, np.asarray(storage_codes, np.uint8))
+        fb.put(Sec.COL_LOGICAL, np.asarray(logical_codes, np.uint8))
+        fb.put(Sec.COL_KIND, np.asarray(kinds, np.uint8))
+        fb.put(Sec.QUANT_META, quant)
+
+        fb.put(Sec.ROWS_PER_GROUP,
+               np.asarray(self._rows_per_group_arr, np.uint32))
+        fb.put(Sec.CHUNK_PAGE_START, starts)
+        fb.put(Sec.PAGE_OFFSET, np.asarray(self._page_offset, np.uint64))
+        fb.put(Sec.PAGE_SIZE, np.asarray(self._page_size, np.uint64))
+        fb.put(Sec.PAGE_ROWS, np.asarray(self._page_rows, np.uint32))
+        fb.put(Sec.PAGE_CHECKSUM, cksums)
+        fb.put(Sec.PAGE_FLAGS, np.asarray(self._page_flags, np.uint8))
+        fb.put(Sec.DV_OFFSET, np.full(n_pages, 0xFFFFFFFFFFFFFFFF, np.uint64))
+        fb.put(Sec.DV_SIZE, np.zeros(n_pages, np.uint32))
+        fb.put(Sec.DV_DATA, b"")
+        fb.put(Sec.GROUP_CHECKSUM, tree.groups)
+        if self.props:
+            fb.put(Sec.PROPS, b"\x00".join(
+                k.encode() + b"\x00" + v.encode()
+                for k, v in self.props.items()) + b"\x00")
+
+        footer = fb.build()
+        f.write(footer)
+        f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        f.close()
+        self._f = None
+
+        self._result = {"rows": n_rows, "groups": n_groups, "pages": n_pages,
+                        "file_checksum": tree.root}
+        return self._result
 
     # -- write-time statistics ----------------------------------------------------
     def _page_stats_record(self, spec: ColumnSpec, chunk, stored):
@@ -272,22 +375,47 @@ class BullionWriter:
             return stats_record(np.asarray(chunk, np.uint64))
         return stats_record(list(chunk))
 
+    def _stats_for(self, spec: ColumnSpec, chunk, stored):
+        if not (self.collect_stats or self.encoding_advisor is not None):
+            return None
+        return self._page_stats_record(spec, chunk, stored)
+
+    def _ctx_for(self, rec, arr: np.ndarray) -> EncodeContext:
+        """Stats-driven encoding choice hook: the advisor may restrict the
+        cascade's candidate list from the chunk's min/max/distinct record.
+        A compliance-restricted candidate set (maskable encodings) always
+        wins — the advisor can only narrow it further."""
+        if self.encoding_advisor is None or rec is None:
+            return self.ctx
+        advised = self.encoding_advisor(rec, len(arr), arr.dtype)
+        if not advised:
+            return self.ctx
+        if self.ctx.candidates is not None:
+            advised = tuple(c for c in advised if c in self.ctx.candidates)
+            if not advised:
+                return self.ctx
+        return _dc_replace(self.ctx, candidates=advised)
+
     # -- page building -----------------------------------------------------------
     def _build_page(self, spec: ColumnSpec, chunk) -> tuple[bytes, PageType, object]:
-        """Returns (payload, page type, stored scalar array or None)."""
+        """Returns (payload, page type, stats record or None)."""
         if spec.kind == ColKind.SCALAR:
             arr = np.asarray(chunk)
             if spec.quant.mode != QuantMode.NONE:
                 arr = quantize(arr, spec.quant)
-            return pages.build_scalar_page(arr, self.ctx), PageType.SCALAR, arr
+            rec = self._stats_for(spec, chunk, arr)
+            blob = pages.build_scalar_page(arr, self._ctx_for(rec, arr))
+            return blob, PageType.SCALAR, rec
         if spec.kind == ColKind.MEDIA_REF:
             arr = np.asarray(chunk, np.uint64)
-            return pages.build_scalar_page(arr, self.ctx), PageType.MEDIA_REF, arr
+            rec = self._stats_for(spec, chunk, arr)
+            blob = pages.build_scalar_page(arr, self._ctx_for(rec, arr))
+            return blob, PageType.MEDIA_REF, rec
         if spec.kind == ColKind.LIST:
-            blob, ptype = pages.build_list_page(list(chunk), self.ctx,
-                                                use_sparse_delta=spec.sparse_delta)
-            return blob, ptype, None
+            blob, ptype = pages.build_list_page(
+                list(chunk), self.ctx, use_sparse_delta=spec.sparse_delta)
+            return blob, ptype, self._stats_for(spec, chunk, None)
         if spec.kind == ColKind.STRING:
             return pages.build_string_page(list(chunk), self.ctx), \
-                PageType.STRING, None
+                PageType.STRING, self._stats_for(spec, chunk, None)
         raise ValueError(spec.kind)

@@ -40,20 +40,26 @@ Layout:
   source.py    — shard discovery (file/dir/glob/list), open-time schema
                  checking (``SchemaMismatchError``), reader lifecycle,
                  global row offsets, aggregate ``IOStats``
-  executor.py  — ``decode_group``/``execute_group``: the one read pipeline
+  executor.py  — ``decode_group``/``execute_group``: the one read pipeline,
+                 plus ``run_tasks`` (bounded thread pool, deterministic order)
+                 shared by parallel reads and the sink
+  sink.py      — ``write_dataset``/``WriteResult``: the plan-driven
+                 materialization sink behind ``Dataset.write_to`` (compaction
+                 / compliance purge, resharding, reclustering, re-encoding)
   core.py      — the chainable ``Dataset`` and the ``dataset()`` entry point
 """
 
 from .core import Dataset, DatasetBatch, dataset
-from .executor import GroupResult, decode_group, execute_group
+from .executor import GroupResult, decode_group, execute_group, run_tasks
 from .plan import (LogicalPlan, OptimizedPlan, PhysicalPlan, ScanTask, lower,
                    optimize, split_conjuncts)
+from .sink import WriteResult, write_dataset
 from .source import DataSource, SchemaMismatchError, discover
 
 __all__ = [
     "Dataset", "DatasetBatch", "dataset", "DataSource",
     "SchemaMismatchError", "discover",
-    "GroupResult", "decode_group", "execute_group", "LogicalPlan",
-    "OptimizedPlan", "PhysicalPlan", "ScanTask", "lower", "optimize",
-    "split_conjuncts",
+    "GroupResult", "decode_group", "execute_group", "run_tasks",
+    "LogicalPlan", "OptimizedPlan", "PhysicalPlan", "ScanTask", "lower",
+    "optimize", "split_conjuncts", "WriteResult", "write_dataset",
 ]

@@ -182,11 +182,15 @@ class Dataset:
             self._credited = True
             self._source.credit_pruned(phys.bytes_pruned)
 
-    def _execute(self, output_columns: Optional[Sequence[str]] = None
+    def _execute(self, output_columns: Optional[Sequence[str]] = None,
+                 parallelism: int = 1
                  ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
         """Run the plan; ``output_columns`` overrides materialization for
         data-free terminals (row_ids/count) without spawning a new instance
-        (caches and the pruned-bytes credit stay shared)."""
+        (caches and the pruned-bytes credit stay shared). ``parallelism > 1``
+        decodes independent (shard, group) tasks on a bounded thread pool;
+        results stream in task order, so the output is identical to a serial
+        run."""
         opt = self.plan()
         phys = self.physical_plan()
         self._credit(phys)
@@ -194,21 +198,26 @@ class Dataset:
         cols = opt.output_columns if output_columns is None \
             else tuple(output_columns)
         filtered = p.predicate is not None or p.row_ids is not None
-        emitted, limit = 0, p.limit
-        for task in phys.tasks:
-            if limit is not None and emitted >= limit:
-                break
-            res = executor.execute_group(
+
+        def run(task: ScanTask) -> Optional[executor.GroupResult]:
+            return executor.execute_group(
                 self._source.reader(task.shard), task.group,
                 columns=cols, predicate=p.predicate,
                 rows=task.rows, drop_deleted=p.drop_deleted,
                 dequant=p.dequantize, use_kernel=p.use_kernel)
+
+        emitted, limit = 0, p.limit
+        if limit is not None and limit <= 0:
+            return
+        for task, res in executor.run_tasks(phys.tasks, run, parallelism):
             if res is None or (filtered and not len(res.row_ids)):
                 continue
             if limit is not None and emitted + len(res.row_ids) > limit:
                 res = executor.truncate_result(res, limit - emitted)
             emitted += len(res.row_ids)
             yield task, res
+            if limit is not None and emitted >= limit:
+                break
 
     def read_group(self, group: int, shard: int = 0) -> Optional[dict]:
         """Execute the plan over one row group (loader-style streaming).
@@ -234,12 +243,13 @@ class Dataset:
         return None if res is None else res.table
 
     # -- terminals --------------------------------------------------------------
-    def scan_batches(self) -> Iterator[DatasetBatch]:
+    def scan_batches(self, *, parallelism: int = 1) -> Iterator[DatasetBatch]:
         """Stream per-group results *with* their global row ids — the
         single-pass terminal when a caller needs both the data and the row
-        identity (one scan, one pruned-bytes credit)."""
+        identity (one scan, one pruned-bytes credit). ``parallelism > 1``
+        decodes groups on a thread pool; the stream order is unchanged."""
         bounds: dict[int, np.ndarray] = {}
-        for task, res in self._execute():
+        for task, res in self._execute(parallelism=parallelism):
             if task.shard not in bounds:
                 bounds[task.shard] = \
                     _group_bounds(self._source.footer(task.shard))
@@ -248,13 +258,14 @@ class Dataset:
             yield DatasetBatch(shard=task.shard, group=task.group,
                                row_ids=offset + res.row_ids, table=res.table)
 
-    def to_batches(self, batch_size: Optional[int] = None) -> Iterator[dict]:
+    def to_batches(self, batch_size: Optional[int] = None, *,
+                   parallelism: int = 1) -> Iterator[dict]:
         """Stream result tables. ``batch_size=None`` yields one table per
         surviving row group (natural batches); an integer re-slices the
         stream into tables of exactly ``batch_size`` rows (last may be
         short)."""
         if batch_size is None:
-            for _, res in self._execute():
+            for _, res in self._execute(parallelism=parallelism):
                 yield res.table
             return
         if batch_size <= 0:
@@ -262,7 +273,7 @@ class Dataset:
         cols = self.plan().output_columns
         buf: list[dict] = []
         buffered = 0
-        for _, res in self._execute():
+        for _, res in self._execute(parallelism=parallelism):
             buf.append(res.table)
             buffered += len(res.row_ids)
             while buffered >= batch_size:
@@ -273,18 +284,20 @@ class Dataset:
         if buffered:
             yield _concat_tables(buf, cols)
 
-    def to_table(self) -> dict:
+    def to_table(self, *, parallelism: int = 1) -> dict:
         """Materialize the whole result as one column dict."""
         cols = self.plan().output_columns
-        return _concat_tables([res.table for _, res in self._execute()], cols,
-                              empty=self._empty_column)
+        return _concat_tables(
+            [res.table for _, res in self._execute(parallelism=parallelism)],
+            cols, empty=self._empty_column)
 
-    def row_ids(self) -> np.ndarray:
+    def row_ids(self, *, parallelism: int = 1) -> np.ndarray:
         """Global row ids (raw row space) of every surviving row. Reads only
         the predicate columns (use ``scan_batches`` for ids + data in one
         pass)."""
         parts, bounds = [], {}
-        for task, res in self._execute(output_columns=()):
+        for task, res in self._execute(output_columns=(),
+                                       parallelism=parallelism):
             if task.shard not in bounds:
                 bounds[task.shard] = \
                     _group_bounds(self._source.footer(task.shard))
@@ -293,7 +306,7 @@ class Dataset:
         return np.concatenate(parts).astype(np.int64) if parts \
             else np.zeros(0, np.int64)
 
-    def count_rows(self) -> int:
+    def count_rows(self, *, parallelism: int = 1) -> int:
         """Number of surviving rows. Without a predicate or pinned rows this
         is answered from footers alone — zero data preads."""
         p = self._plan
@@ -309,7 +322,68 @@ class Dataset:
                         if p.drop_deleted else executor.raw_row_count(fv, g)
             return total if p.limit is None else min(total, p.limit)
         return sum(len(res.row_ids)
-                   for _, res in self._execute(output_columns=()))
+                   for _, res in self._execute(output_columns=(),
+                                               parallelism=parallelism))
+
+    # -- write path (materialization sink) ---------------------------------------
+    def write_to(self, out_dir: str, *, shard_rows: Optional[int] = None,
+                 rows_per_group: Optional[int] = None, sort_by=None,
+                 compliance: Optional[int] = None, parallelism: int = 1,
+                 collect_stats: bool = True, use_advisor: bool = True):
+        """Materialize this plan into a fresh sharded v1 dataset under
+        ``out_dir`` (the read/write loop's write half — see
+        ``repro.dataset.sink``).
+
+        The surviving rows of the plan — filters, projections, ``head``
+        limits, and dequantization all compose — are re-encoded into
+        ``part-NNNNN.bln`` shards: deletion-vector rows are physically
+        purged (``verify_deleted`` reports zero raw occurrences), fresh
+        zone maps are collected, and cascade encoding selection re-runs per
+        chunk seeded by the chunk statistics. ``shard_rows`` rotates output
+        shards every N rows; ``sort_by`` re-clusters by a column name (stable
+        ascending) or any ``SortUDF`` (e.g. ``quality_sort``) so zone maps on
+        the sort column become selective; ``parallelism`` decodes input
+        groups on a thread pool with deterministic output. Returns a
+        ``WriteResult``."""
+        from .sink import write_dataset
+        return write_dataset(self, out_dir, shard_rows=shard_rows,
+                             rows_per_group=rows_per_group, sort_by=sort_by,
+                             compliance=compliance, parallelism=parallelism,
+                             collect_stats=collect_stats,
+                             use_advisor=use_advisor)
+
+    def delete_where(self, predicate: Predicate, level=None):
+        """Multi-shard compliance delete: erase every row matching
+        ``predicate`` across all shards (global row ids are translated to
+        each shard's local raw row space, then ``core.deletion.delete_rows``
+        runs per affected shard). Returns the aggregated ``DeleteStats``.
+
+        When rows were deleted the shard files were rewritten underneath
+        this dataset, so the instance is closed and marked stale — reopen
+        with ``dataset()`` to observe the deletion."""
+        import dataclasses
+
+        from ..core.deletion import Compliance, DeleteStats, delete_rows
+
+        level = Compliance.LEVEL2 if level is None else level
+        ids = self.where(predicate).drop_deleted(False).row_ids()
+        total = DeleteStats()
+        self.close()                  # close() is recoverable; reopen on use
+        if not len(ids):
+            return total
+        located: list[tuple[str, np.ndarray]] = []
+        for s in range(self._source.n_shards):
+            lo, hi = self._source.row_offset(s), self._source.row_offset(s + 1)
+            local = ids[(ids >= lo) & (ids < hi)] - lo
+            if len(local):
+                located.append((self._source.paths[s], local))
+        self._source.invalidate("delete_where rewrote shard files")
+        for path, local in located:
+            st = delete_rows(path, local, level)
+            for f in dataclasses.fields(DeleteStats):
+                setattr(total, f.name,
+                        getattr(total, f.name) + getattr(st, f.name))
+        return total
 
     def _empty_column(self, name: str):
         """Typed empty result for a column no batch produced: scalar columns

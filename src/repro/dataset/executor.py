@@ -242,6 +242,55 @@ def execute_group(reader: "BullionReader", group: int, *,
     return GroupResult(row_ids=raw_local, table=out)
 
 
+# ---------------------------------------------------------------------------
+# parallel task execution (bounded thread pool, deterministic order)
+# ---------------------------------------------------------------------------
+
+
+def run_tasks(tasks, fn, parallelism: int = 1):
+    """Execute ``fn(task)`` for every task, yielding ``(task, result)``
+    strictly in task order.
+
+    ``parallelism <= 1`` is the plain serial loop (zero overhead, the
+    default). Above that, up to ``parallelism`` tasks run concurrently on a
+    thread pool with a bounded in-flight window (results are buffered at
+    most ``2 * parallelism`` deep), so a consumer that stops early — a
+    ``head`` limit, an aborted iteration — never waits on more than the
+    window. Per-(shard, row-group) tasks are independent and readers use
+    positional I/O, so ordering the *yields* is all determinism needs:
+    parallel and serial runs produce identical streams.
+    """
+    tasks = list(tasks)
+    if parallelism <= 1 or len(tasks) <= 1:
+        for t in tasks:
+            yield t, fn(t)
+        return
+    from collections import deque
+    from concurrent.futures import ThreadPoolExecutor
+
+    ex = ThreadPoolExecutor(max_workers=parallelism,
+                            thread_name_prefix="bullion-scan")
+    pending: deque = deque()
+    it = iter(tasks)
+    try:
+        def fill() -> None:
+            while len(pending) < 2 * parallelism:
+                t = next(it, None)
+                if t is None:
+                    return
+                pending.append((t, ex.submit(fn, t)))
+
+        fill()
+        while pending:
+            t, fut = pending.popleft()
+            yield t, fut.result()
+            fill()
+    finally:
+        for _, fut in pending:
+            fut.cancel()
+        ex.shutdown(wait=True)
+
+
 def truncate_result(res: GroupResult, n: int) -> GroupResult:
     """Keep the first n rows of a group result (head limit)."""
     return GroupResult(row_ids=res.row_ids[:n],

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import glob as _glob
 import os
+import threading
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -52,12 +53,18 @@ def discover(spec: PathSpec) -> list[str]:
         return paths
     if any(ch in spec for ch in "*?["):
         matched = sorted(_glob.glob(spec))
+        if not matched:
+            raise FileNotFoundError(f"glob {spec!r} matched no files")
         paths = [p for p in matched if _is_bullion(p)]
         if not paths:
             raise FileNotFoundError(
                 f"glob {spec!r} matched no Bullion files "
                 f"({len(matched)} non-Bullion match(es) skipped)")
         return paths
+    if not os.path.exists(spec):
+        raise FileNotFoundError(
+            f"dataset path {spec!r} does not exist (expected a Bullion "
+            "file, a shard directory, a glob pattern, or a path list)")
     return [spec]
 
 
@@ -78,6 +85,8 @@ class DataSource:
         self._readers: list[Optional[BullionReader]] = \
             list(readers) if readers is not None else [None] * len(self.paths)
         self._retired: list[IOStats] = []
+        self._open_lock = threading.Lock()   # parallel tasks race reader()
+        self._invalid: Optional[str] = None
         # read every footer now — schema mismatches surface at dataset()
         # time, not deep inside a scan — but hold no file handles: planning
         # is footer-only, and readers open lazily per shard on first data
@@ -116,16 +125,32 @@ class DataSource:
     def reader(self, shard: int) -> BullionReader:
         """Open (or reuse) the shard's data reader — first data access.
         Reuses the footer parsed at discovery time (no second parse)."""
+        self._check_valid()
         r = self._readers[shard]
         if r is None:
-            r = self._readers[shard] = \
-                BullionReader(self.paths[shard], footer=self._foots[shard])
+            with self._open_lock:
+                r = self._readers[shard]
+                if r is None:
+                    r = self._readers[shard] = BullionReader(
+                        self.paths[shard], footer=self._foots[shard])
         return r
 
     def footer(self, shard: int) -> FooterView:
         """Footer-only access: never opens a file handle."""
+        self._check_valid()
         r = self._readers[shard]
         return r.footer if r is not None else self._footers[shard]
+
+    def invalidate(self, reason: str) -> None:
+        """Mark cached footers stale (a rewrite — e.g. ``delete_where`` —
+        changed the files underneath). Every later access raises; callers
+        reopen with ``dataset()``."""
+        self._invalid = reason
+
+    def _check_valid(self) -> None:
+        if self._invalid is not None:
+            raise ValueError(
+                f"dataset is stale: {self._invalid}; reopen with dataset()")
 
     def row_offset(self, shard: int) -> int:
         return int(self._row_offsets[shard])

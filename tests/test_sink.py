@@ -1,0 +1,494 @@
+"""Materialization sink (Dataset.write_to) + parallel execution tests:
+round-trip equality, v0->v1 upgrade, compliance purge audited with
+verify_deleted, resharding row counts, recluster pruning gains, streaming
+writer mode, stats-driven encoding advisor, multi-shard delete_where, and
+parallel == serial determinism."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BullionReader, BullionWriter, ColumnSpec, Compliance,
+                        QuantMode, QuantSpec, delete_rows, delete_where,
+                        verify_deleted)
+from repro.core.encodings import (advise_candidates, blob_encoding_name,
+                                  choose_encoding)
+from repro.dataset import dataset
+from repro.scan import C, stats_record
+
+
+def _write(path, *, n=2000, rows_per_group=250, collect_stats=True, seed=0,
+           shuffle_ids=False):
+    rng = np.random.default_rng(seed)
+    schema = [
+        ColumnSpec("id", "int64"),
+        ColumnSpec("score", "float32"),
+        ColumnSpec("qx", "float32", quant=QuantSpec(QuantMode.BF16)),
+        ColumnSpec("tag", "string"),
+        ColumnSpec("seq", "list<int64>"),
+    ]
+    ids = np.arange(n, dtype=np.int64)
+    if shuffle_ids:
+        ids = rng.permutation(ids)
+    table = {
+        "id": ids,
+        "score": rng.random(n).astype(np.float32),
+        "qx": rng.normal(size=n).astype(np.float32),
+        "tag": [b"t%d" % (i % 7) for i in range(n)],
+        "seq": [np.arange(i % 5, dtype=np.int64) for i in range(n)],
+    }
+    w = BullionWriter(path, schema, rows_per_group=rows_per_group,
+                      collect_stats=collect_stats)
+    w.write_table(table)
+    w.close()
+    return table
+
+
+def _assert_tables_equal(got, expect, idx=None):
+    for k, v in got.items():
+        e = expect[k] if idx is None else (
+            expect[k][idx] if isinstance(expect[k], np.ndarray)
+            else [expect[k][i] for i in idx])
+        if isinstance(v, np.ndarray):
+            assert np.array_equal(v, np.asarray(e)), k
+        elif v and isinstance(v[0], np.ndarray):
+            assert len(v) == len(e) and \
+                all(np.array_equal(a, b) for a, b in zip(v, e)), k
+        else:
+            assert v == list(e), k
+
+
+# ---------------------------------------------------------------------------
+# tentpole: write_to round trips, purges, reshards, reclusters
+# ---------------------------------------------------------------------------
+
+
+def test_compact_round_trip_table_in_table_out(tmp_path):
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        res = ds.write_to(out)
+    assert res.rows == 2000 and res.shards == 1
+    assert res.bytes_written == sum(os.path.getsize(p) for p in res.paths)
+    with dataset(out) as ds:
+        got = ds.dequantized(False).to_table()
+    with dataset(path) as ds:
+        raw = ds.dequantized(False).to_table()
+    # storage-exact round trip: same quant spec re-quantizes to the same bits
+    for k in got:
+        if isinstance(got[k], np.ndarray):
+            assert np.array_equal(got[k], raw[k]), k
+    with dataset(out) as ds:
+        _assert_tables_equal(
+            ds.select(["id", "score", "tag", "seq"]).to_table(), table)
+
+
+def test_write_to_composes_with_plan(tmp_path):
+    """Filters, projections, and head limits all shape the output."""
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        res = ds.where((C("id") >= 500) & (C("id") < 900)) \
+            .select(["id", "tag"]).write_to(out)
+    assert res.rows == 400
+    with dataset(out) as ds:
+        assert ds.column_names == ["id", "tag"]
+        got = ds.to_table()
+    idx = np.arange(500, 900)
+    assert np.array_equal(got["id"], table["id"][idx])
+    assert got["tag"] == [table["tag"][i] for i in idx]
+    out2 = str(tmp_path / "out2")
+    with dataset(path) as ds:
+        assert ds.select(["id"]).head(123).write_to(out2).rows == 123
+
+
+def test_v0_upgrades_to_v1_via_write_to(tmp_path):
+    path = str(tmp_path / "v0.bln")
+    _write(path, collect_stats=False)
+    with BullionReader(path) as r:
+        assert not r.footer.has_stats
+    out = str(tmp_path / "v1")
+    with dataset(path) as ds:
+        res = ds.write_to(out)
+    with BullionReader(res.paths[0]) as r:
+        assert r.footer.has_stats and r.footer.format_version >= 1
+    with dataset(out) as ds:
+        phys = ds.where(C("id") == 7).select(["score"]).physical_plan()
+        assert phys.groups_pruned > 0 and phys.bytes_pruned > 0
+
+
+def test_purge_physically_erases_deleted_rows(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    victims = np.arange(100, 160)
+    delete_rows(path, victims, level=Compliance.LEVEL1)   # DV-only
+    audit = verify_deleted(path, "id", victims)
+    assert audit["visible_rows"] == 0 and audit["raw_occurrences"] == 60
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        res = ds.write_to(out, shard_rows=700)
+    assert res.rows == 1940
+    for p in res.paths:
+        a = verify_deleted(p, "id", victims)
+        assert a["visible_rows"] == 0 and a["raw_occurrences"] == 0
+    with dataset(out) as ds:
+        assert ds.count_rows() == 1940
+        assert ds.drop_deleted(False).count_rows() == 1940  # no DVs at all
+
+
+def test_resharding_row_counts(tmp_path):
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        res = ds.write_to(out, shard_rows=600, rows_per_group=200)
+    assert res.shards == 4
+    assert res.rows_per_shard == [600, 600, 600, 200]
+    assert [os.path.basename(p) for p in res.paths] == \
+        [f"part-{i:05d}.bln" for i in range(4)]
+    for p, want in zip(res.paths, res.rows_per_shard):
+        with BullionReader(p) as r:
+            assert r.num_rows == want
+    with dataset(out) as ds:
+        assert ds.n_shards == 4
+        assert np.array_equal(ds.select(["id"]).to_table()["id"], table["id"])
+
+
+def test_recluster_strictly_improves_pruning(tmp_path):
+    path = str(tmp_path / "t.bln")
+    table = _write(path, shuffle_ids=True)
+    victim = 1234
+    with dataset(path) as ds:
+        pre = ds.where(C("id") == victim).select(["score"]).physical_plan()
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        ds.write_to(out, sort_by="id")
+    with dataset(out) as ds:
+        q = ds.where(C("id") == victim).select(["score"])
+        post = q.physical_plan()
+        assert post.bytes_pruned > pre.bytes_pruned
+        # the reclustered probe still returns the right row
+        got = q.to_table()["score"]
+    src = int(np.flatnonzero(table["id"] == victim)[0])
+    assert np.array_equal(got, table["score"][src:src + 1])
+    # sorted output: ids are monotone
+    with dataset(out) as ds:
+        ids = ds.select(["id"]).to_table()["id"]
+    assert np.array_equal(ids, np.sort(table["id"]))
+
+
+def test_recluster_with_sort_udf(tmp_path):
+    from repro.core import quality_sort
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        ds.select(["id", "score"]).write_to(out, sort_by=quality_sort("score"))
+    with dataset(out) as ds:
+        got = ds.to_table()
+    order = np.argsort(-table["score"], kind="stable")
+    assert np.array_equal(got["id"], table["id"][order])
+    assert np.array_equal(got["score"], table["score"][order])
+
+
+def test_write_to_validation_errors(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    out = str(tmp_path / "out")
+    with dataset(path) as ds:
+        with pytest.raises(ValueError, match="shard_rows"):
+            ds.write_to(out, shard_rows=0)
+        with pytest.raises(KeyError, match="sort_by"):
+            ds.select(["id"]).write_to(out, sort_by="score")
+        ds.write_to(out)
+        # refuses to mix datasets in a non-empty output directory
+        with pytest.raises(FileExistsError, match="already holds"):
+            ds.write_to(out)
+
+
+def test_write_to_empty_result_still_opens(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    out = str(tmp_path / "empty")
+    with dataset(path) as ds:
+        res = ds.where(C("id") == 10 ** 9).select(["id", "tag"]).write_to(out)
+    assert res.rows == 0 and res.shards == 1
+    with dataset(out) as ds:
+        assert ds.count_rows() == 0
+        tbl = ds.to_table()
+        assert tbl["id"].dtype == np.int64 and len(tbl["id"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# parallel execution: identical results, shared by reads and the sink
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_terminals_match_serial(tmp_path):
+    d = str(tmp_path / "shards")
+    os.makedirs(d)
+    for s in range(3):
+        _write(os.path.join(d, f"part-{s:04d}.bln"), n=1000, seed=s)
+    pred = (C("score") >= 0.2) & (C("score") < 0.7)
+    with dataset(d) as ds:
+        q = ds.where(pred).select(["id", "score", "tag"])
+        serial = q.to_table()
+        serial_ids = q.row_ids()
+    with dataset(d) as ds:
+        q = ds.where(pred).select(["id", "score", "tag"])
+        par = q.to_table(parallelism=4)
+        par_ids = q.row_ids(parallelism=4)
+        assert q.count_rows(parallelism=4) == len(serial_ids)
+        batches = list(q.scan_batches(parallelism=4))
+    assert np.array_equal(serial_ids, par_ids)
+    assert np.array_equal(serial["id"], par["id"])
+    assert np.array_equal(serial["score"], par["score"])
+    assert serial["tag"] == par["tag"]
+    assert np.array_equal(np.concatenate([b.row_ids for b in batches]),
+                          serial_ids)
+
+
+def test_parallel_head_limit_matches_serial(tmp_path):
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    with dataset(path) as ds:
+        got = ds.select(["id"]).head(300).to_table(parallelism=4)["id"]
+    assert np.array_equal(got, table["id"][:300])
+
+
+def test_parallel_write_to_identical_output(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path, shuffle_ids=True)
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    with dataset(path) as ds:
+        ra = ds.write_to(a, shard_rows=700)
+    with dataset(path) as ds:
+        rb = ds.write_to(b, shard_rows=700, parallelism=4)
+    assert ra.rows == rb.rows and ra.rows_per_shard == rb.rows_per_shard
+    for pa, pb in zip(ra.paths, rb.paths):
+        with open(pa, "rb") as fa, open(pb, "rb") as fb:
+            assert fa.read() == fb.read()     # byte-identical shards
+
+
+# ---------------------------------------------------------------------------
+# streaming writer + stats-driven encoding advisor
+# ---------------------------------------------------------------------------
+
+
+def test_stream_writer_matches_batch_writer(tmp_path):
+    rng = np.random.default_rng(3)
+    schema = [ColumnSpec("a", "int64"), ColumnSpec("s", "string")]
+    tbl = {"a": rng.integers(0, 50, 1000),
+           "s": [b"x%d" % (i % 3) for i in range(1000)]}
+    batch, stream = str(tmp_path / "b.bln"), str(tmp_path / "s.bln")
+    w = BullionWriter(batch, schema, rows_per_group=64)
+    w.write_table(tbl)
+    w.close()
+    w = BullionWriter(stream, schema, rows_per_group=64, stream=True)
+    for lo in range(0, 1000, 37):                # ragged incremental writes
+        w.write_table({k: v[lo:lo + 37] for k, v in tbl.items()})
+    info = w.close()
+    assert info["rows"] == 1000 and info["groups"] == 16
+    with open(batch, "rb") as fb, open(stream, "rb") as fs:
+        assert fb.read() == fs.read()
+    with pytest.raises(ValueError, match="stream"):
+        BullionWriter(str(tmp_path / "x.bln"), schema, stream=True,
+                      sort_udf=lambda t: np.arange(1))
+
+
+def test_writer_close_is_idempotent(tmp_path):
+    for stream in (False, True):
+        p = str(tmp_path / f"c{stream}.bln")
+        w = BullionWriter(p, [ColumnSpec("a", "int64")], rows_per_group=4,
+                          stream=stream)
+        w.write_table({"a": np.arange(10)})
+        first = w.close()
+        size = os.path.getsize(p)
+        assert w.close() == first              # second close must not rewrite
+        assert os.path.getsize(p) == size
+        with dataset(p) as ds:
+            assert np.array_equal(ds.to_table()["a"], np.arange(10))
+
+
+def test_failed_write_to_cleans_up_and_is_retryable(tmp_path):
+    path = str(tmp_path / "t.bln")
+    table = _write(path)
+    out = str(tmp_path / "out")
+
+    def bad_sort(tbl):
+        raise RuntimeError("sort exploded")
+
+    with dataset(path) as ds:
+        with pytest.raises(RuntimeError, match="sort exploded"):
+            ds.write_to(out, shard_rows=500, sort_by=bad_sort)
+        assert os.listdir(out) == []           # no partial shards left
+        res = ds.write_to(out, shard_rows=500)  # retry is not blocked
+    assert res.rows == 2000
+    with dataset(out) as ds:
+        assert np.array_equal(ds.select(["id"]).to_table()["id"], table["id"])
+
+
+def test_output_schema_sniffs_sparse_delta_across_shards(tmp_path):
+    from repro.dataset.sink import output_schema
+    d = str(tmp_path / "shards")
+    os.makedirs(d)
+    schema = [ColumnSpec("seq", "list<int64>", sparse_delta=True)]
+    # shard 0: unrelated rows -> the size guard ships plain LIST pages;
+    # shard 1: window-sharing rows -> sparse delta wins and is recorded
+    rng = np.random.default_rng(0)
+    w = BullionWriter(os.path.join(d, "part-0000.bln"), schema,
+                      rows_per_group=64)
+    w.write_table({"seq": [rng.integers(0, 2 ** 40, 64) for _ in range(64)]})
+    w.close()
+    base = np.arange(4096, dtype=np.int64)
+    w = BullionWriter(os.path.join(d, "part-0001.bln"), schema,
+                      rows_per_group=64)
+    w.write_table({"seq": [base[i:i + 128] for i in range(64)]})
+    w.close()
+    from repro.core import PageType, Sec
+    from repro.core.reader import BullionReader as BR
+    with BR(os.path.join(d, "part-0000.bln")) as r:
+        flags0 = r.footer.arr(Sec.PAGE_FLAGS, np.uint8)
+    with BR(os.path.join(d, "part-0001.bln")) as r:
+        flags1 = r.footer.arr(Sec.PAGE_FLAGS, np.uint8)
+    assert not (flags0 & 0x7F == int(PageType.SPARSE_DELTA)).any()
+    assert (flags1 & 0x7F == int(PageType.SPARSE_DELTA)).any()
+    with dataset(d) as ds:
+        (spec,) = output_schema(ds._source, ("seq",), True)
+        assert spec.sparse_delta    # shard 0 alone would say False
+
+
+def test_advise_candidates_families():
+    const = stats_record(np.zeros(500, np.int64) + 7)
+    assert "constant" in advise_candidates(const, 500, np.dtype(np.int64))
+    lowcard = stats_record(np.arange(500, dtype=np.int64) % 4)
+    assert "dictionary" in advise_candidates(lowcard, 500, np.dtype(np.int64))
+    unique = stats_record(np.arange(500, dtype=np.int64) + 10 ** 12)
+    assert "bitshuffle" in advise_candidates(unique, 500, np.dtype(np.int64))
+    narrow = stats_record(np.repeat(
+        np.arange(250, dtype=np.int64), 2) + 10 ** 12)
+    assert "for" in advise_candidates(narrow, 500, np.dtype(np.int64))
+    wide = stats_record(
+        np.random.default_rng(0).integers(0, 2 ** 40, 500))
+    assert advise_candidates(wide, 500, np.dtype(np.int64)) is None
+    assert advise_candidates(None, 500, np.dtype(np.int64)) is None
+
+
+def test_advisor_agrees_with_sampling_cascade(tmp_path):
+    """For clear-cut chunks (constant, low-cardinality, all-unique narrow
+    range) the advisor's restricted list contains the full cascade's pick,
+    and the restricted choice stays lossless."""
+    from repro.core import EncodeContext
+    from repro.core.encodings import decode_blob, encode_array
+
+    rng = np.random.default_rng(1)
+    for arr in (np.full(2000, 9, np.int64),
+                rng.integers(0, 3, 2000),
+                np.arange(2000, dtype=np.int64) + 5_000_000):
+        rec = stats_record(arr)
+        advised = advise_candidates(rec, len(arr), arr.dtype)
+        assert advised is not None
+        assert choose_encoding(arr) in advised
+        blob = encode_array(arr, EncodeContext(candidates=advised))
+        assert np.array_equal(decode_blob(blob), arr)
+
+
+def test_write_to_advisor_output_decodes_identically(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    with_adv, without = str(tmp_path / "adv"), str(tmp_path / "noadv")
+    with dataset(path) as ds:
+        ds.write_to(with_adv)
+    with dataset(path) as ds:
+        ds.write_to(without, use_advisor=False)
+    with dataset(with_adv) as da, dataset(without) as db:
+        ta, tb = da.to_table(), db.to_table()
+    for k in ta:
+        if isinstance(ta[k], np.ndarray):
+            assert np.array_equal(ta[k], tb[k]), k
+
+
+# ---------------------------------------------------------------------------
+# multi-shard delete_where + stale-handle protection
+# ---------------------------------------------------------------------------
+
+
+def test_delete_where_fans_across_shards(tmp_path):
+    d = str(tmp_path / "shards")
+    os.makedirs(d)
+    for s in range(3):
+        t = _write(os.path.join(d, f"part-{s:04d}.bln"), n=1000, seed=s)
+        # shard-local ids 0..999 in every shard -> matches span all shards
+        assert np.array_equal(np.sort(t["id"]), np.arange(1000))
+    st = delete_where(d, C("id") < 10, level=Compliance.LEVEL2)
+    assert st.rows_deleted == 30                 # 10 rows in each of 3 shards
+    assert st.pages_touched > 0
+    with dataset(d) as ds:
+        assert ds.where(C("id") < 10).count_rows() == 0
+        assert ds.count_rows() == 2970
+    for s in range(3):
+        a = verify_deleted(os.path.join(d, f"part-{s:04d}.bln"), "id",
+                           np.arange(1, 10))    # 0 is the masking value
+        assert a["visible_rows"] == 0 and a["raw_occurrences"] == 0
+
+
+def test_delete_where_only_rewrites_matching_shards(tmp_path):
+    d = str(tmp_path / "shards")
+    os.makedirs(d)
+    paths = []
+    for s in range(3):                # disjoint id ranges per shard
+        p = os.path.join(d, f"part-{s:04d}.bln")
+        paths.append(p)
+        w = BullionWriter(p, [ColumnSpec("id", "int64")], rows_per_group=250)
+        w.write_table({"id": np.arange(s * 1000, (s + 1) * 1000)})
+        w.close()
+    before = [open(p, "rb").read() for p in paths]
+    st = delete_where(d, (C("id") >= 1500) & (C("id") < 1600))
+    assert st.rows_deleted == 100     # all in shard 1 (global->local mapped)
+    after = [open(p, "rb").read() for p in paths]
+    assert after[0] == before[0] and after[2] == before[2]
+    assert after[1] != before[1]
+    with dataset(d) as ds:
+        assert ds.count_rows() == 2900
+        got = ds.where((C("id") >= 1400) & (C("id") < 1700)).to_table()["id"]
+    assert np.array_equal(got, np.r_[np.arange(1400, 1500),
+                                     np.arange(1600, 1700)])
+
+
+def test_delete_where_invalidates_stale_dataset(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    ds = dataset(path)
+    st = ds.delete_where(C("id") < 5)
+    assert st.rows_deleted == 5
+    with pytest.raises(ValueError, match="stale"):
+        ds.count_rows()
+    # reopening observes the deletion
+    with dataset(path) as fresh:
+        assert fresh.count_rows() == 1995
+    # no-match deletes leave the dataset usable
+    ds2 = dataset(path)
+    assert ds2.delete_where(C("id") == 10 ** 9).rows_deleted == 0
+    assert ds2.count_rows() == 1995
+    ds2.close()
+
+
+# ---------------------------------------------------------------------------
+# discovery error messages (empty dir / glob / missing path)
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_over_missing_and_empty_sources_raises_clearly(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError, match="no Bullion shards"):
+        dataset(str(empty))
+    with pytest.raises(FileNotFoundError, match="matched no files"):
+        dataset(str(tmp_path / "nothing-*.bln"))
+    with pytest.raises(FileNotFoundError, match="does not exist"):
+        dataset(str(tmp_path / "missing_dir"))
+    with pytest.raises(FileNotFoundError, match="empty dataset path list"):
+        dataset([])
