@@ -25,7 +25,8 @@ from repro.scan import C
 
 
 def _write(path: str, n_rows: int, rows_per_group: int,
-           sort_by_quality: bool, id_base: int = 0, seed: int = 0) -> None:
+           sort_by_quality: bool, id_base: int = 0, seed: int = 0,
+           page_rows=None) -> None:
     """Zone maps prune along whatever the write path clustered: sorted ids
     for point probes, or quality-presorted rows (§2.5) for threshold reads."""
     rng = np.random.default_rng(seed)
@@ -35,6 +36,7 @@ def _write(path: str, n_rows: int, rows_per_group: int,
         ColumnSpec("payload", "float32"),
     ]
     w = BullionWriter(path, schema, rows_per_group=rows_per_group,
+                      page_rows=page_rows,
                       sort_udf=quality_sort("quality") if sort_by_quality
                       else None)
     w.write_table({
@@ -82,6 +84,7 @@ def run(report):
             scan_bytes = st.bytes_read - st.footer_bytes
             scan_preads = st.preads
             pruned_bytes = st.bytes_pruned
+            pruned_pages = st.pages_pruned
             plan = q.physical_plan()
         t_scan = time.perf_counter() - t0
 
@@ -96,10 +99,12 @@ def run(report):
         report("scan/selectivity_pct", 100 * sel, f"{100 * sel:.4f}% of rows")
         report("scan/groups_pruned", plan.groups_pruned,
                f"{plan.groups_pruned}/{plan.groups_total} row groups "
-               "skipped before any pread", pruned_bytes=pruned_bytes)
+               "skipped before any pread", pruned_bytes=pruned_bytes,
+               pages_pruned=pruned_pages)
         report("scan/bytes_pruned_vs_full", base_bytes / max(scan_bytes, 1),
                f"{base_bytes / max(scan_bytes, 1):.1f}x fewer data bytes "
-               f"({scan_bytes}B vs {base_bytes}B)", pruned_bytes=pruned_bytes)
+               f"({scan_bytes}B vs {base_bytes}B)", pruned_bytes=pruned_bytes,
+               pages_pruned=pruned_pages)
         report("scan/preads_pruned_vs_full", base_preads / max(scan_preads, 1),
                f"{base_preads} preads -> {scan_preads}")
         report("scan/time_pruned_vs_full", t_base / max(t_scan, 1e-9),
@@ -130,6 +135,51 @@ def run(report):
                f"4-shard dir: {len(sharded_plan.tasks)} task(s), "
                f"{sharded_plan.groups_pruned}/{sharded_plan.groups_total} "
                f"groups pruned, {sbytes}B read", pruned_bytes=spruned)
+
+        # page-granular pruning (multi-page chunks): recluster an unclustered
+        # dataset through write_to(sort_by="id"), then run the same
+        # ~0.0015%-selectivity point probe against a single-page layout and
+        # an 8-pages-per-group layout. Group pruning is identical for both
+        # (same zone maps, same clustering); the multi-page layout *also*
+        # skips the non-matching pages inside the surviving group, so it must
+        # decode strictly fewer bytes, with pages_pruned > 0 in the CSV.
+        unclustered = os.path.join(td, "page_base.bln")
+        _write(unclustered, n_rows, rows_per_group, sort_by_quality=True)
+        layouts: dict = {}
+        for label, pr in (("single", rows_per_group),
+                          ("multi", max(1, rows_per_group // 8))):
+            out_dir = os.path.join(td, f"reclustered_{label}")
+            with dataset(unclustered) as ds:
+                ds.select(["id", "payload"]).write_to(
+                    out_dir, sort_by="id", rows_per_group=rows_per_group,
+                    page_rows=pr)
+            with dataset(out_dir) as ds:
+                q = ds.where(C("id") == victim).select(["id", "payload"])
+                tbl = q.to_table()
+                st = ds.stats
+                layouts[label] = {
+                    "table": tbl,
+                    "data_bytes": st.bytes_read - st.footer_bytes,
+                    "pruned_bytes": st.bytes_pruned,
+                    "pages_pruned": st.pages_pruned,
+                }
+        single, multi = layouts["single"], layouts["multi"]
+        assert multi["table"]["id"].tobytes() == \
+            single["table"]["id"].tobytes(), \
+            "multi-page layout changed the probe's result rows"
+        assert multi["table"]["payload"].tobytes() == \
+            single["table"]["payload"].tobytes()
+        assert multi["data_bytes"] < single["data_bytes"], \
+            "page-granular pruning must decode strictly fewer bytes than " \
+            f"single-page ({multi['data_bytes']}B vs {single['data_bytes']}B)"
+        assert multi["pages_pruned"] > single["pages_pruned"] >= 0
+        report("scan/page_granular_bytes_vs_single_page",
+               single["data_bytes"] / max(multi["data_bytes"], 1),
+               f"reclustered probe: {multi['data_bytes']}B decoded vs "
+               f"{single['data_bytes']}B single-page, "
+               f"{multi['pages_pruned']} pages pruned",
+               pruned_bytes=multi["pruned_bytes"],
+               pages_pruned=multi["pages_pruned"])
 
         # §2.5 quality-threshold read: presorted quality -> prefix of groups
         path = os.path.join(td, "scan_sorted.bln")

@@ -1,7 +1,10 @@
 # One function per paper table/figure. Prints
-# ``name,us_per_call,pruned_bytes,derived`` CSV; ``pruned_bytes`` is the
-# plan-proven avoided I/O (IOStats.bytes_pruned) so pruning regressions show
-# up in the perf trajectory, blank for suites where pruning doesn't apply.
+# ``name,us_per_call,pruned_bytes,pages_pruned,derived`` CSV; ``pruned_bytes``
+# is the plan-proven avoided I/O (IOStats.bytes_pruned) and ``pages_pruned``
+# the page reads those proofs skipped (IOStats.pages_pruned — group- plus
+# page-granular zone maps), so pruning regressions at either granularity show
+# up in the perf trajectory; both blank for suites where pruning doesn't
+# apply.
 #
 # ``--only scan,compact`` restricts to matching suites (substring match on
 # the label or module name); ``BULLION_BENCH_SMOKE=1`` makes the suites that
@@ -27,15 +30,16 @@ def main(argv=None) -> None:
                          "label or module matches (e.g. --only scan,compact)")
     args = ap.parse_args(argv)
 
-    rows: list[tuple[str, float, str, str]] = []
+    rows: list[tuple[str, float, str, str, str]] = []
 
     def report(name: str, value: float, derived: str = "",
-               pruned_bytes=None) -> None:
+               pruned_bytes=None, pages_pruned=None) -> None:
         pruned = "" if pruned_bytes is None else str(int(pruned_bytes))
-        rows.append((name, float(value), pruned, derived))
-        print(f"{name},{value:.6g},{pruned},{derived}", flush=True)
+        pages = "" if pages_pruned is None else str(int(pages_pruned))
+        rows.append((name, float(value), pruned, pages, derived))
+        print(f"{name},{value:.6g},{pruned},{pages},{derived}", flush=True)
 
-    print("name,us_per_call,pruned_bytes,derived")
+    print("name,us_per_call,pruned_bytes,pages_pruned,derived")
     suites = [
         ("metadata  (Fig. 5)", bench_metadata),
         ("deletion  (§2.1)", bench_deletion),

@@ -20,7 +20,15 @@ from repro.scan import C
 
 def write_shard(path, n, seed=0):
     """Sparse click sequences (§2.2), BF16-quantized dense features (§2.4),
-    strings, all cascade-encoded (§2.6), with write-time zone maps."""
+    strings, all cascade-encoded (§2.6), with write-time zone maps.
+
+    Each 1024-row group is split into 8 pages of ``page_rows=128`` (the
+    derived default is rows_per_group/8 floored at 1024 rows, so these tiny
+    demo groups would stay single-page without the explicit override;
+    ``BULLION_PAGE_ROWS`` overrides fleet-wide). Every page carries its own
+    zone map and is encoded from its own statistics, so scans can skip
+    *pages inside* a surviving group and homogeneous spans get tighter
+    encodings."""
     rng = np.random.default_rng(seed)
     schema = [
         ColumnSpec("user_id", "int64"),
@@ -34,7 +42,7 @@ def write_shard(path, n, seed=0):
         "ctr_7d": rng.random(n).astype(np.float32),
         "device": [b"ios" if i % 3 else b"android" for i in range(n)],
     }
-    w = BullionWriter(path, schema, rows_per_group=1024)
+    w = BullionWriter(path, schema, rows_per_group=1024, page_rows=128)
     w.write_table(table)
     stats = w.close()
     raw = sum(np.asarray(v).nbytes if isinstance(v, np.ndarray)
@@ -69,12 +77,19 @@ def main():
         first = ds.select(["device"]).head(5).to_table()
         print(f"first 5 devices: {first['device']}")
         # user_id is write-time sorted, so a point lookup prunes to the one
-        # group whose zone map admits it
+        # group whose zone map admits it — and, inside that group, to the
+        # one page per column whose *page* zone map admits it. Page-granular
+        # pruning only bites on clustered columns like this one: on an
+        # unclustered column every page's [min, max] spans the whole domain
+        # and nothing inside the group can be skipped (recluster with
+        # write_to(sort_by=...) first).
         uid = int(ds.select(["user_id"]).head(1).to_table()["user_id"][0])
         point = ds.where(C("user_id") == uid).select(["ctr_7d"])
         phys = point.physical_plan()
         print(f"point lookup user {uid}: {len(phys.tasks)}/{phys.groups_total} "
-              f"groups read, {phys.bytes_pruned:,}B pruned by zone maps")
+              f"groups read, {phys.pages_total - phys.pages_pruned}/"
+              f"{phys.pages_total} pages read, "
+              f"{phys.bytes_pruned:,}B pruned by zone maps")
 
     # --- the same plan runs unchanged over a sharded directory --------------
     shard_dir = os.path.join(td, "shards")
@@ -112,8 +127,11 @@ def main():
     with dataset(path) as ds:
         pre = ds.where(C("ctr_7d") >= 0.99).select(["user_id"]) \
             .physical_plan()
+        # page_rows= carries through the sink too (default: the input's
+        # budget); after the sort_by recluster the CTR pages are monotone,
+        # so threshold reads prune to a page-level prefix
         res = ds.write_to(compact_dir, shard_rows=4096, sort_by="ctr_7d",
-                          parallelism=2)
+                          parallelism=2, page_rows=128)
     print(f"compacted -> {res.shards} shard(s), {res.rows} rows, "
           f"{res.bytes_written:,}B (reclustering trades click-seq "
           "compression locality for CTR pruning — sort order is the "

@@ -61,6 +61,36 @@ def _shift(positions: np.ndarray, prior_dv: np.ndarray) -> np.ndarray:
     return positions - np.cumsum(prior_dv)[positions]
 
 
+def _erases(ptype: int, before: bytes, after: bytes, positions: np.ndarray,
+            phys_rows: int, was_compacted: bool, compact_ok: bool) -> bool:
+    """Is an in-place mask result both *physically erasing* and invariant-
+    preserving?
+
+    Masking writes 0 — which is no erasure when the stored value was itself
+    0, and some encodings cannot even write it (a constant page's mask is a
+    no-op, a FOR row at the base keeps decoding the base). An erasure audit
+    (``verify_deleted``) would still find the forbidden value in all those
+    cases, so the caller must fall back to compact relocation. The compact
+    mask rule (rows physically removed) always erases — and is the *only*
+    acceptable in-place result for an already-compacted page, whose decoded
+    length must keep tracking ``page_rows - popcount(DV)``. That same
+    invariant makes it *unacceptable* (``compact_ok=False``) on a
+    non-compacted page still holding zero-masked DV rows from earlier
+    deletes: compacting only the new rows would leave the decoded length
+    tracking neither convention — relocation unions the old rows instead."""
+    if ptype not in (int(PageType.SCALAR), int(PageType.MEDIA_REF)):
+        return True          # list/string rows are zeroed element-wise
+    dec = np.asarray(pages_mod.decode_page(ptype, after))
+    if len(dec) == phys_rows - len(positions):
+        return compact_ok    # compact rule physically removed the rows
+    if was_compacted or len(dec) != phys_rows:
+        return False         # compacted pages must stay compacted
+    if np.any(dec[positions] != 0):
+        return False         # the encoding could not overwrite the value
+    orig = np.asarray(pages_mod.decode_page(ptype, before))
+    return not np.any(orig[positions] == 0)
+
+
 def delete_rows(path: str, global_rows: np.ndarray,
                 level: Compliance = Compliance.LEVEL2) -> DeleteStats:
     """Delete rows from a Bullion file, per the requested compliance level."""
@@ -80,9 +110,8 @@ def delete_rows(path: str, global_rows: np.ndarray,
     page_offset = fv.arr(Sec.PAGE_OFFSET, np.uint64).copy()
     page_size = fv.arr(Sec.PAGE_SIZE, np.uint64).copy()
     n_pages = fv.n_pages
-    group_page_start = np.arange(0, n_pages + 1, n_cols, dtype=np.uint64)
-    tree = MerkleTree(fv.arr(Sec.PAGE_CHECKSUM, np.uint64), group_page_start,
-                      fv.n_groups, 1)
+    tree = MerkleTree(fv.arr(Sec.PAGE_CHECKSUM, np.uint64),
+                      fv.group_page_start(), fv.n_groups, 1)
     baseline_ops = tree.hash_ops
 
     dvs: dict[int, np.ndarray] = {}
@@ -105,9 +134,18 @@ def delete_rows(path: str, global_rows: np.ndarray,
         for group, local in located:
             for col in range(n_cols):
                 s, e = fv.chunk_pages(group, col)
+                row_lo = 0
                 for p in range(s, e):
+                    # each page covers one row range of the group; only the
+                    # pages actually holding victim rows are touched
+                    row_hi = row_lo + int(page_rows[p])
+                    plocal = local[(local >= row_lo) & (local < row_hi)] \
+                        - row_lo
+                    row_lo = row_hi
+                    if len(plocal) == 0:
+                        continue
                     dv = dv_for(p)
-                    new_positions = local[~dv[local]]
+                    new_positions = plocal[~dv[plocal]]
                     if len(new_positions) == 0:
                         continue
                     stats.pages_touched += 1
@@ -125,8 +163,15 @@ def delete_rows(path: str, global_rows: np.ndarray,
 
                     phys = _shift(new_positions, dv) if was_compacted \
                         else new_positions
+                    phys_rows = int(page_rows[p]) - int(dv.sum()) \
+                        if was_compacted else int(page_rows[p])
                     masked = pages_mod.mask_page(ptype, payload, phys,
                                                  int(page_rows[p]))
+                    if masked is not None and \
+                            not _erases(ptype, payload, masked, phys,
+                                        phys_rows, was_compacted,
+                                        was_compacted or not dv.any()):
+                        masked = None
                     if masked is not None:
                         f.seek(off)
                         f.write(masked)
@@ -138,10 +183,26 @@ def delete_rows(path: str, global_rows: np.ndarray,
                             page_flags[p] |= COMPACTED
                     else:
                         # relocate: zero old extent (physical erasure), append
-                        # a rebuilt page before the footer.
-                        rebuilt = pages_mod.rebuild_page(
-                            ptype, payload, phys,
-                            compact=was_compacted)
+                        # a rebuilt page before the footer. Scalar pages
+                        # relocate *compacted* — rows removed, not zeroed —
+                        # so even a stored 0 is audit-proof; previously
+                        # zero-masked rows are compacted away with them to
+                        # keep the decoded-length invariant.
+                        if ptype in (int(PageType.SCALAR),
+                                     int(PageType.MEDIA_REF)):
+                            if was_compacted:
+                                drop = phys
+                            else:
+                                union = dv.copy()
+                                union[new_positions] = True
+                                drop = np.flatnonzero(union)
+                            rebuilt = pages_mod.rebuild_page(
+                                ptype, payload, drop, compact=True)
+                            page_flags[p] |= COMPACTED
+                        else:
+                            rebuilt = pages_mod.rebuild_page(
+                                ptype, payload, phys,
+                                compact=was_compacted)
                         f.seek(off)
                         f.write(b"\x00" * size)
                         f.seek(append_at)

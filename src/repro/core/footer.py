@@ -29,12 +29,14 @@ MAGIC = b"BULLION1"
 _DIR_ENTRY = struct.Struct("<HQQ")
 _TAIL = struct.Struct("<Q8s")
 
-# Format versions (META word 7). v0 files predate write-time statistics and
-# remain fully readable: stats sections are simply absent and every scan
-# degrades to the unpruned path.
+# Format versions (META word 7). Readers never gate on the version number —
+# capabilities are detected by section presence (``has``) — so every older
+# file remains fully readable: v0 files lack stats sections and never prune,
+# v1 files lack the page-count index and read as one page per chunk.
 FORMAT_V0 = 0             # seed format: no statistics sections
 FORMAT_V1 = 1             # + PAGE_STATS / CHUNK_STATS zone maps
-FORMAT_VERSION = FORMAT_V1
+FORMAT_V2 = 2             # + CHUNK_PAGE_COUNT (multi-page chunks)
+FORMAT_VERSION = FORMAT_V2
 
 
 class Sec(IntEnum):
@@ -61,6 +63,7 @@ class Sec(IntEnum):
     PROPS = 20            # optional key\0value\0... (cold; parsed on demand)
     PAGE_STATS = 21       # STAT_DTYPE[n_pages] zone maps (v1+, see scan.stats)
     CHUNK_STATS = 22      # STAT_DTYPE[n_groups * n_cols] per-chunk zone maps (v1+)
+    CHUNK_PAGE_COUNT = 23  # u32[n_groups * n_cols] pages per chunk (v2+; absent = 1)
 
 
 class PageType(IntEnum):
@@ -198,12 +201,33 @@ class FooterView:
     # -- page addressing -------------------------------------------------------
     def chunk_pages(self, group: int, col: int) -> tuple[int, int]:
         """Return [start, end) page-index range for (row-group, column).
-        One page per chunk today; layout order may differ from logical order
-        (§2.5 column reordering), hence an explicit per-chunk index."""
-        starts = self.arr(Sec.CHUNK_PAGE_START, np.uint64)
+        A chunk holds ``CHUNK_PAGE_COUNT`` consecutive pages (v2+); files
+        without the section (v0/v1) are one page per chunk. Layout order may
+        differ from logical order (§2.5 column reordering), hence an explicit
+        per-chunk index."""
         idx = group * self.n_cols + col
-        p = int(starts[idx])
+        p = int(self.arr(Sec.CHUNK_PAGE_START, np.uint64)[idx])
+        if self.has(Sec.CHUNK_PAGE_COUNT):
+            return p, p + int(self.arr(Sec.CHUNK_PAGE_COUNT, np.uint32)[idx])
         return p, p + 1
+
+    def chunk_page_rows(self, group: int, col: int) -> np.ndarray:
+        """Per-page row counts of one chunk (u32 view into PAGE_ROWS).
+        Pages partition the chunk's rows in order: page k covers group-local
+        rows [sum(rows[:k]), sum(rows[:k+1]))."""
+        s, e = self.chunk_pages(group, col)
+        return self.arr(Sec.PAGE_ROWS, np.uint32)[s:e]
+
+    def group_page_start(self) -> np.ndarray:
+        """u64[n_groups + 1] page-index boundary per row group (the Merkle
+        tree's group partition). Derived: a group's pages are contiguous, so
+        its first page is the min chunk start across its columns; v0/v1
+        files degrade to exactly n_cols pages per group."""
+        if self.n_groups == 0:
+            return np.zeros(1, np.uint64)
+        starts = self.arr(Sec.CHUNK_PAGE_START, np.uint64)
+        mins = starts.reshape(self.n_groups, self.n_cols).min(axis=1)
+        return np.concatenate([mins, np.asarray([self.n_pages], np.uint64)])
 
     def page_extent(self, page: int) -> tuple[int, int]:
         off = self.arr(Sec.PAGE_OFFSET, np.uint64)[page]

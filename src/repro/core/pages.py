@@ -1,6 +1,8 @@
 """Physical page payloads.
 
-A page holds one column chunk's rows in one of four layouts:
+A page holds one bounded row range of a column chunk (a chunk is a
+contiguous run of pages; see ``BullionWriter(page_rows=)``) in one of four
+layouts:
   SCALAR       -> one cascaded-encoding blob
   LIST         -> offsets blob + values blob (ragged list<T>)
   STRING       -> string column blob (offsets + byte data)

@@ -38,6 +38,8 @@ class IOStats:
     metadata_seconds: float = 0.0
     bytes_pruned: int = 0     # data bytes a plan proved it never had to read
                               # (zone maps, row location, head limits)
+    pages_pruned: int = 0     # page reads those proofs avoided (group- and
+                              # page-granular zone maps)
 
 
 class BullionReader:

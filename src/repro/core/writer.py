@@ -15,16 +15,30 @@ Two buffering modes share one group-flush core:
   incompatible with streaming (sort upstream, e.g. ``Dataset.write_to``'s
   ``sort_by=``).
 
-Encoding selection can be steered per chunk through ``encoding_advisor``: the
+A column chunk is split into multiple pages of at most ``page_rows`` rows
+each (default: an eighth of ``rows_per_group``, floored at 1024 rows — the
+production 65536-row group gets 8 pages per column, while tiny groups stay
+single-page because per-page encoding overhead would dominate; override per
+writer or fleet-wide via the ``BULLION_PAGE_ROWS`` environment variable,
+both of which bypass the floor). Every column of a group splits at the
+*same* row boundaries, so page ordinal k covers the same row range in every
+chunk — that alignment is what lets the scanner prune and the executor
+decode at page granularity. ``page_rows >= rows_per_group`` degrades to the
+classic one-page-per-chunk layout.
+
+Encoding selection can be steered per page through ``encoding_advisor``: the
 zone-map statistics record (min/max/distinct — the LEA feature set) is
-computed *before* the page is encoded and handed to the advisor, which may
+computed *before* each page is encoded and handed to the advisor, which may
 restrict the cascade's candidate list (see ``encodings.cascade
-.advise_candidates``). The same record is then persisted in the footer, so
-stats are collected once and used twice.
+.advise_candidates``) — smaller, more homogeneous pages give the advisor
+strictly better signals than whole-chunk stats. The same records are then
+persisted in the footer (``Sec.PAGE_STATS``, merged into
+``Sec.CHUNK_STATS``), so stats are collected once and used twice.
 """
 
 from __future__ import annotations
 
+import os
 import struct
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Callable, Optional, Sequence
@@ -34,8 +48,8 @@ import numpy as np
 from . import pages
 from .encodings import EncodeContext
 from .encodings.base import dtype_code
-from .footer import (ColKind, FooterBuilder, FORMAT_V0, FORMAT_VERSION, MAGIC,
-                     PageType, Sec, name_hash)
+from .footer import (ColKind, FooterBuilder, FORMAT_V0, FORMAT_V2,
+                     FORMAT_VERSION, MAGIC, PageType, Sec, name_hash)
 from .merkle import MerkleTree, page_hash
 from .quantization import (QUANT_DTYPE, QuantMode, QuantSpec, dequantize,
                            quantize, storage_dtype)
@@ -69,6 +83,10 @@ class ColumnSpec:
         return np.dtype(self.dtype)
 
 
+# floor for the *derived* page_rows default (rows_per_group / 8): below
+# this, per-page encoding overhead outweighs pruning granularity
+MIN_DEFAULT_PAGE_ROWS = 1024
+
 SortUDF = Callable[[dict], np.ndarray]         # table -> row permutation
 ColumnOrderUDF = Callable[[list[str]], list[str]]  # names -> layout order
 # (stats record, n values, storage dtype) -> restricted candidate names
@@ -97,11 +115,32 @@ class BullionWriter:
                  props: Optional[dict[str, str]] = None,
                  collect_stats: bool = True,
                  stream: bool = False,
-                 encoding_advisor: Optional[EncodingAdvisor] = None):
+                 encoding_advisor: Optional[EncodingAdvisor] = None,
+                 page_rows: Optional[int] = None):
         self.path = path
         self.schema = list(schema)
         self.by_name = {s.name: s for s in self.schema}
         self.rows_per_group = rows_per_group
+        if page_rows is None:
+            env = os.environ.get("BULLION_PAGE_ROWS")
+            if not collect_stats:
+                # v0 backward-compat target: seed-shaped single-page chunks
+                # (multi-page without page stats prunes nothing anyway); an
+                # explicit page_rows= still wins and stamps a stat-less v2
+                page_rows = rows_per_group
+            elif env:
+                page_rows = int(env)
+            else:
+                # derived default only: a floor keeps tiny groups single-
+                # page (each page pays a fixed cascade-selection cost at
+                # write time); explicit page_rows= / env are taken verbatim
+                page_rows = max(MIN_DEFAULT_PAGE_ROWS, rows_per_group // 8)
+        if page_rows <= 0:
+            raise ValueError(f"page_rows must be positive, got {page_rows}")
+        # page budget: every chunk of a group splits at the same multiples of
+        # page_rows, so page ordinals align across columns (page-granular
+        # pruning depends on this)
+        self.page_rows = min(int(page_rows), rows_per_group)
         self.compliance = compliance
         self.sort_udf = sort_udf
         self.column_order_udf = column_order_udf
@@ -144,6 +183,7 @@ class BullionWriter:
         # page index per logical (group, col) chunk; with §2.5 layout
         # reordering a group's pages aren't in logical order.
         self._chunk_ranges: dict[tuple[int, int], tuple[int, int]] = {}
+        self._group_page_start: list[int] = [0]   # Merkle group partition
         self._n_groups = 0
         self._result: Optional[dict] = None   # close() is idempotent
 
@@ -218,22 +258,30 @@ class BullionWriter:
             self._layout = layout
         g = self._n_groups
         self._rows_per_group_arr.append(n_rows)
+        # every column splits at the same page_rows multiples, so ordinal k
+        # covers one row range group-wide; a zero-row group still carries one
+        # (empty) page per column so readers see well-formed chunks
+        bounds = list(range(0, n_rows, self.page_rows)) or [0]
         for name in self._layout:
             spec = self.by_name[name]
-            blob, ptype, rec = self._build_page(spec, table[name])
+            data = table[name]
             start_page = len(self._page_offset)
-            self._page_offset.append(self._f.tell())
-            self._page_size.append(len(blob))
-            self._page_rows.append(n_rows)
-            self._page_cksum.append(page_hash(blob))
-            self._page_flags.append(int(ptype))
-            self._f.write(blob)
+            for lo in bounds:
+                hi = min(lo + self.page_rows, n_rows)
+                blob, ptype, rec = self._build_page(spec, data[lo:hi])
+                self._page_offset.append(self._f.tell())
+                self._page_size.append(len(blob))
+                self._page_rows.append(hi - lo)
+                self._page_cksum.append(page_hash(blob))
+                self._page_flags.append(int(ptype))
+                self._f.write(blob)
+                if self.collect_stats:
+                    self._page_stat_recs.append(rec)
+                    self._chunk_stat_recs.setdefault(
+                        (g, self._logical_idx[name]), []).append(rec)
             self._chunk_ranges[(g, self._logical_idx[name])] = \
                 (start_page, len(self._page_offset))
-            if self.collect_stats:
-                self._page_stat_recs.append(rec)
-                self._chunk_stat_recs.setdefault(
-                    (g, self._logical_idx[name]), []).append(rec)
+        self._group_page_start.append(len(self._page_offset))
         self._n_groups += 1
 
     # -- finalize ----------------------------------------------------------------
@@ -281,12 +329,14 @@ class BullionWriter:
         f = self._f
 
         starts = np.zeros(n_groups * n_cols, np.uint64)
+        counts = np.zeros(n_groups * n_cols, np.uint32)
         for (g, c), (s, e) in self._chunk_ranges.items():
             starts[g * n_cols + c] = s
+            counts[g * n_cols + c] = e - s
 
         cksums = np.asarray(self._page_cksum, np.uint64)
         # merkle over physical page order, grouped by row group
-        group_page_start = np.arange(0, n_pages + 1, n_cols, dtype=np.uint64)
+        group_page_start = np.asarray(self._group_page_start, np.uint64)
         tree = MerkleTree(cksums, group_page_start, n_groups, 1)
 
         fb = FooterBuilder()
@@ -295,7 +345,12 @@ class BullionWriter:
         meta[4] = self.rows_per_group
         meta[5] = self.compliance
         meta[6] = tree.root
-        meta[7] = FORMAT_VERSION if self.collect_stats else FORMAT_V0
+        # version word is informational (readers detect capabilities by
+        # section presence), but must not claim v0 — one page per chunk —
+        # for a file that actually carries multi-page chunks
+        multi_page = any(e - s > 1 for s, e in self._chunk_ranges.values())
+        meta[7] = FORMAT_VERSION if self.collect_stats else \
+            (FORMAT_V2 if multi_page else FORMAT_V0)
         fb.put(Sec.META, meta)
 
         if self.collect_stats:
@@ -337,6 +392,7 @@ class BullionWriter:
         fb.put(Sec.ROWS_PER_GROUP,
                np.asarray(self._rows_per_group_arr, np.uint32))
         fb.put(Sec.CHUNK_PAGE_START, starts)
+        fb.put(Sec.CHUNK_PAGE_COUNT, counts)
         fb.put(Sec.PAGE_OFFSET, np.asarray(self._page_offset, np.uint64))
         fb.put(Sec.PAGE_SIZE, np.asarray(self._page_size, np.uint64))
         fb.put(Sec.PAGE_ROWS, np.asarray(self._page_rows, np.uint32))
@@ -346,10 +402,12 @@ class BullionWriter:
         fb.put(Sec.DV_SIZE, np.zeros(n_pages, np.uint32))
         fb.put(Sec.DV_DATA, b"")
         fb.put(Sec.GROUP_CHECKSUM, tree.groups)
-        if self.props:
-            fb.put(Sec.PROPS, b"\x00".join(
-                k.encode() + b"\x00" + v.encode()
-                for k, v in self.props.items()) + b"\x00")
+        # page budget recorded for introspection (write_to keeps the input's
+        # page layout by default); user props may override
+        props = {"bullion.page_rows": str(self.page_rows), **self.props}
+        fb.put(Sec.PROPS, b"\x00".join(
+            k.encode() + b"\x00" + v.encode()
+            for k, v in props.items()) + b"\x00")
 
         footer = fb.build()
         f.write(footer)

@@ -5,11 +5,14 @@ plan (projection to the token column, optional quality predicate) is built
 and lowered once at construction — zone-map pruning decides the surviving
 row groups up front — and each group is then read through the same
 prune -> pread -> decode -> deletion-mask -> dequantize -> filter pipeline
-every other surface uses. Work is split by row group across data-parallel
-ranks (disjoint, contiguous ranges — the quality-presorted layout keeps each
-rank's reads sequential), host decode overlaps device compute via a prefetch
-thread, and the cursor (epoch, group index) is checkpointable for
-exactly-once resume.
+every other surface uses. Work is split across data-parallel ranks by
+*shard* when the dataset has at least one file per rank — each rank then
+reads disjoint files, so distributed training never contends on a handle or
+an OS page-cache line — and by row group otherwise (single-file datasets, or
+fewer shards than ranks). Either way ranks see disjoint, contiguous ranges;
+the quality-presorted layout keeps each rank's reads sequential. Host decode
+overlaps device compute via a prefetch thread, and the cursor (epoch, group
+index) is checkpointable for exactly-once resume.
 """
 
 from __future__ import annotations
@@ -59,6 +62,16 @@ class BullionLoader:
         self._tasks = {group_off[t.shard] + t.group: t
                        for t in self.dataset.tasks()}
         self._groups = sorted(self._tasks)
+        # rank striping: across whole shards when every rank can own at
+        # least one *surviving* file (disjoint handles, no shared page-cache
+        # lines); across row groups otherwise (single file, fewer shards
+        # than ranks, or zone-map pruning emptied too many shards — a rank
+        # must never starve while others read). Shards are assigned by
+        # position in the sorted surviving-shard list, which is identical on
+        # every rank (same plan) and static across epochs and resumes.
+        live = sorted({t.shard for t in self._tasks.values()})
+        self._shard_rank = {s: i % world for i, s in enumerate(live)}
+        self._stripe_shards = world > 1 and len(live) >= world
         self._tokens_per_batch = batch_size * (seq_len + 1)
         self._buf = np.zeros(0, np.int32)
         self._queue: queue.Queue = queue.Queue(maxsize=prefetch)
@@ -67,6 +80,9 @@ class BullionLoader:
 
     # -- group scheduling --------------------------------------------------------
     def _my_groups(self, epoch: int) -> list[int]:
+        if self._stripe_shards:
+            return [g for g in self._groups
+                    if self._shard_rank[self._tasks[g].shard] == self.rank]
         return [g for i, g in enumerate(self._groups)
                 if i % self.world == self.rank]
 

@@ -52,6 +52,7 @@ class Dataset:
         # instance, so optimize/lower run once however many terminals fire
         self._opt: Optional[OptimizedPlan] = None
         self._phys: Optional[PhysicalPlan] = None
+        self._task_pages: Optional[dict] = None   # (shard, group) -> ordinals
         self._credited = False          # pruned bytes: one credit per plan
 
     @classmethod
@@ -168,6 +169,10 @@ class Dataset:
             f"PhysicalPlan: {self.n_shards} shard(s), {len(phys.tasks)} task(s)",
             f"  groups: {phys.groups_total - phys.groups_pruned}/"
             f"{phys.groups_total} kept ({phys.groups_pruned} pruned)",
+            f"  pages: {phys.pages_total - phys.pages_pruned}/"
+            f"{phys.pages_total} kept ({phys.pages_pruned} pruned, "
+            f"{sum(1 for t in phys.tasks if t.pages is not None)} "
+            "page-subset task(s))",
             f"  bytes: <= {phys.bytes_total - phys.bytes_pruned} read, "
             f"{phys.bytes_pruned} pruned of {phys.bytes_total} total",
         ]
@@ -178,9 +183,9 @@ class Dataset:
         # One credit per Dataset instance (= one planned scan), however many
         # terminals observe it — tasks() + read_group() streaming and a
         # plain to_table() both count the avoided I/O exactly once.
-        if phys.bytes_pruned and not self._credited:
+        if (phys.bytes_pruned or phys.pages_pruned) and not self._credited:
             self._credited = True
-            self._source.credit_pruned(phys.bytes_pruned)
+            self._source.credit_pruned(phys.bytes_pruned, phys.pages_pruned)
 
     def _execute(self, output_columns: Optional[Sequence[str]] = None,
                  parallelism: int = 1
@@ -204,7 +209,8 @@ class Dataset:
                 self._source.reader(task.shard), task.group,
                 columns=cols, predicate=p.predicate,
                 rows=task.rows, drop_deleted=p.drop_deleted,
-                dequant=p.dequantize, use_kernel=p.use_kernel)
+                dequant=p.dequantize, use_kernel=p.use_kernel,
+                pages=task.pages)
 
         emitted, limit = 0, p.limit
         if limit is not None and limit <= 0:
@@ -219,11 +225,21 @@ class Dataset:
             if limit is not None and emitted >= limit:
                 break
 
+    def _page_sel(self, shard: int, group: int) -> Optional[tuple]:
+        """Surviving page ordinals the lowered plan picked for (shard,
+        group), so per-group streaming (``read_group``) prunes pages exactly
+        like batch execution. None = read every page."""
+        if self._task_pages is None:
+            self._task_pages = {(t.shard, t.group): t.pages
+                                for t in self.physical_plan().tasks}
+        return self._task_pages.get((shard, group))
+
     def read_group(self, group: int, shard: int = 0) -> Optional[dict]:
         """Execute the plan over one row group (loader-style streaming).
         Returns the table dict, or None when no row survives. Honors the
-        plan's predicate and ``with_rows`` pinning; ``head`` limits don't
-        apply (per-group streaming has no cross-group cursor)."""
+        plan's predicate, ``with_rows`` pinning, and page-granular pruning;
+        ``head`` limits don't apply (per-group streaming has no cross-group
+        cursor)."""
         from .plan import locate_rows
         opt = self.plan()
         p = opt.logical
@@ -239,7 +255,8 @@ class Dataset:
         res = executor.execute_group(
             self._source.reader(shard), group, columns=opt.output_columns,
             predicate=p.predicate, rows=rows, drop_deleted=p.drop_deleted,
-            dequant=p.dequantize, use_kernel=p.use_kernel)
+            dequant=p.dequantize, use_kernel=p.use_kernel,
+            pages=self._page_sel(shard, group))
         return None if res is None else res.table
 
     # -- terminals --------------------------------------------------------------
@@ -327,12 +344,13 @@ class Dataset:
 
     # -- write path (materialization sink) ---------------------------------------
     def write_to(self, out_dir: str, *, shard_rows: Optional[int] = None,
-                 rows_per_group: Optional[int] = None, sort_by=None,
+                 rows_per_group: Optional[int] = None,
+                 page_rows: Optional[int] = None, sort_by=None,
                  compliance: Optional[int] = None, parallelism: int = 1,
                  collect_stats: bool = True, use_advisor: bool = True):
-        """Materialize this plan into a fresh sharded v1 dataset under
-        ``out_dir`` (the read/write loop's write half — see
-        ``repro.dataset.sink``).
+        """Materialize this plan into a fresh sharded dataset (current
+        format: v2 page-indexed shards) under ``out_dir`` (the read/write
+        loop's write half — see ``repro.dataset.sink``).
 
         The surviving rows of the plan — filters, projections, ``head``
         limits, and dequantization all compose — are re-encoded into
@@ -342,12 +360,15 @@ class Dataset:
         chunk seeded by the chunk statistics. ``shard_rows`` rotates output
         shards every N rows; ``sort_by`` re-clusters by a column name (stable
         ascending) or any ``SortUDF`` (e.g. ``quality_sort``) so zone maps on
-        the sort column become selective; ``parallelism`` decodes input
+        the sort column become selective; ``page_rows`` sets the output page
+        budget (default: the input's recorded budget), with each page
+        re-encoded from its own statistics; ``parallelism`` decodes input
         groups on a thread pool with deterministic output. Returns a
         ``WriteResult``."""
         from .sink import write_dataset
         return write_dataset(self, out_dir, shard_rows=shard_rows,
-                             rows_per_group=rows_per_group, sort_by=sort_by,
+                             rows_per_group=rows_per_group,
+                             page_rows=page_rows, sort_by=sort_by,
                              compliance=compliance, parallelism=parallelism,
                              collect_stats=collect_stats,
                              use_advisor=use_advisor)

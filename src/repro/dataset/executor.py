@@ -20,7 +20,7 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
-from ..core import pages
+from ..core import pages as pages_mod
 from ..core.footer import ColKind, Sec
 from ..core.quantization import QuantMode, dequantize
 from ..scan.predicate import Predicate, conjunctive_ranges, evaluate
@@ -42,9 +42,40 @@ class GroupResult:
 # ---------------------------------------------------------------------------
 
 
+def _chunk_page_ids(fv, group: int, col: int,
+                    pages: Optional[Sequence[int]]) -> list[int]:
+    """Physical page indices of one chunk, restricted to the page-ordinal
+    selection a plan produced (None = every page)."""
+    s, e = fv.chunk_pages(group, col)
+    return list(range(s, e)) if pages is None else [s + int(k) for k in pages]
+
+
+def _pad_raw(decoded, dv: Optional[np.ndarray], page_rows: int):
+    """Re-align one page's decode to its raw row space (drop_deleted=False):
+    compact-deleted pages (§2.1 RLE rule) physically removed rows, so erased
+    positions are re-padded with 0 — the same value in-place masking writes —
+    to keep raw row ids stable."""
+    if not isinstance(decoded, np.ndarray):
+        return decoded
+    if len(decoded) >= page_rows:
+        return decoded[:page_rows]
+    out = np.zeros(page_rows, decoded.dtype)
+    out[np.flatnonzero(~dv)] = decoded
+    return out
+
+
 def decode_group(reader: "BullionReader", names: Sequence[str], group: int, *,
-                 drop_deleted: bool = True, dequant: bool = True) -> dict:
-    """Decode one row group's columns via coalesced preads."""
+                 drop_deleted: bool = True, dequant: bool = True,
+                 pages: Optional[Sequence[int]] = None,
+                 align_raw: bool = False) -> dict:
+    """Decode one row group's columns via coalesced preads.
+
+    ``pages`` restricts the read to a plan's surviving page ordinals (the
+    same ordinals for every column — pages of one ordinal cover one row
+    range group-wide). ``align_raw`` pads compact-deleted pages back to the
+    raw row space (only meaningful with ``drop_deleted=False``); the default
+    keeps physical page content, which ``verify_deleted`` audits.
+    """
     fv = reader.footer
     cols = [fv.column_index(n) for n in names]
     kinds = fv.arr(Sec.COL_KIND, np.uint8)
@@ -52,18 +83,19 @@ def decode_group(reader: "BullionReader", names: Sequence[str], group: int, *,
     page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
     wanted: list[int] = []
     for c in cols:
-        s, e = fv.chunk_pages(group, c)
-        wanted.extend(range(s, e))
+        wanted.extend(_chunk_page_ids(fv, group, c, pages))
     raw = reader._read_pages(wanted)
     out: dict = {}
     for name, c in zip(names, cols):
-        s, e = fv.chunk_pages(group, c)
         parts = []
-        for p in range(s, e):
-            decoded = pages.decode_page(int(flags[p]) & 0x7F, raw[p])
+        for p in _chunk_page_ids(fv, group, c, pages):
+            decoded = pages_mod.decode_page(int(flags[p]) & 0x7F, raw[p])
             if drop_deleted:
-                decoded = pages.apply_dv(decoded, fv.deletion_vector(p),
-                                         int(page_rows[p]))
+                decoded = pages_mod.apply_dv(decoded, fv.deletion_vector(p),
+                                             int(page_rows[p]))
+            elif align_raw:
+                decoded = _pad_raw(decoded, fv.deletion_vector(p),
+                                   int(page_rows[p]))
             parts.append(decoded)
         val = parts[0] if len(parts) == 1 else _concat(parts)
         if dequant and kinds[c] == int(ColKind.SCALAR):
@@ -83,12 +115,13 @@ def raw_row_count(fv, group: int) -> int:
     return int(fv.arr(Sec.ROWS_PER_GROUP, np.uint32)[group])
 
 
-def group_keep(fv, group: int, col: int = 0) -> Optional[np.ndarray]:
-    """Raw-row keep mask from deletion vectors (None = nothing deleted)."""
-    s, e = fv.chunk_pages(group, col)
+def group_keep(fv, group: int, col: int = 0,
+               pages: Optional[Sequence[int]] = None) -> Optional[np.ndarray]:
+    """Raw-row keep mask from deletion vectors (None = nothing deleted),
+    over the selected pages' rows when ``pages`` restricts the chunk."""
     page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
     parts, any_dv = [], False
-    for p in range(s, e):
+    for p in _chunk_page_ids(fv, group, col, pages):
         dv = fv.deletion_vector(p)
         if dv is None:
             parts.append(np.ones(int(page_rows[p]), bool))
@@ -103,23 +136,19 @@ def visible_row_count(fv, group: int) -> int:
     return raw_row_count(fv, group) if keep is None else int(keep.sum())
 
 
-def expand_raw(fv, group: int, name: str, values):
-    """Re-align a drop_deleted=False column to the raw row space.
-
-    Compact-deleted pages (§2.1 RLE rule) physically remove rows, so the
-    decoded array is shorter than the group's raw row count and indices
-    would otherwise shift. Erased positions read as 0 — the same value
-    in-place masking writes — and zone maps of every touched page were
-    already widened to include 0, so pruning stays consistent."""
-    if not isinstance(values, np.ndarray):
-        return values
-    rows = raw_row_count(fv, group)
-    if len(values) >= rows:
-        return values[:rows]
-    keep = group_keep(fv, group, fv.column_index(name))
-    out = np.zeros(rows, values.dtype)
-    out[np.flatnonzero(keep)] = values
-    return out
+def selected_raw_rows(fv, group: int,
+                      pages: Optional[Sequence[int]]) -> Optional[np.ndarray]:
+    """Group-local raw row ids covered by a page-ordinal selection (None =
+    the whole group). Pages partition a chunk's rows in order, so ordinal k
+    covers rows [starts[k], starts[k+1]) — identical for every column."""
+    if pages is None:
+        return None
+    rows = fv.chunk_page_rows(group, 0).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(rows)])
+    if not len(pages):
+        return np.zeros(0, np.int64)
+    return np.concatenate([np.arange(starts[k], starts[k + 1])
+                           for k in pages])
 
 
 # ---------------------------------------------------------------------------
@@ -177,9 +206,15 @@ def execute_group(reader: "BullionReader", group: int, *,
                   predicate: Optional[Predicate] = None,
                   rows: Optional[np.ndarray] = None,
                   drop_deleted: bool = True, dequant: bool = True,
-                  use_kernel: Optional[bool] = None) -> Optional[GroupResult]:
+                  use_kernel: Optional[bool] = None,
+                  pages: Optional[Sequence[int]] = None
+                  ) -> Optional[GroupResult]:
     """Decode + filter one row group. Returns None when a predicate or a
     row-id selection leaves no rows (payload pages are then never read).
+
+    ``pages`` is a plan's surviving page-ordinal selection: only those
+    pages are pread and decoded for every column, and reported row ids stay
+    in the group's raw row space (each ordinal maps to its row range).
 
     Predicate columns are always evaluated in the dequantized (logical)
     domain — the domain the zone maps describe; ``dequant`` governs only the
@@ -188,8 +223,15 @@ def execute_group(reader: "BullionReader", group: int, *,
     evaluation copy.
     """
     fv = reader.footer
-    keep = group_keep(fv, group) if drop_deleted else None
-    space_raw = np.flatnonzero(keep) if keep is not None else None
+    if pages is not None and not len(pages):
+        return None
+    sel_raw = selected_raw_rows(fv, group, pages)
+    keep = group_keep(fv, group, pages=pages) if drop_deleted else None
+    if keep is not None:
+        space_raw = sel_raw[keep] if sel_raw is not None \
+            else np.flatnonzero(keep)
+    else:
+        space_raw = sel_raw
     n_space = len(space_raw) if space_raw is not None \
         else raw_row_count(fv, group)
 
@@ -198,13 +240,11 @@ def execute_group(reader: "BullionReader", group: int, *,
     tbl: dict = {}
     mask: Optional[np.ndarray] = None
     if predicate is not None:
+        # compact-deleted pages shrink their decode; align_raw re-pads each
+        # page to its raw row space so mask indices line up with space_raw
         tbl = decode_group(reader, pred_cols, group,
-                           drop_deleted=drop_deleted, dequant=True)
-        if not drop_deleted:
-            # compact-deleted pages shrink the decoded array; re-align
-            # every predicate column to the raw row space first
-            tbl = {name: expand_raw(fv, group, name, vals)
-                   for name, vals in tbl.items()}
+                           drop_deleted=drop_deleted, dequant=True,
+                           pages=pages, align_raw=not drop_deleted)
         mask = eval_mask(predicate, tbl, use_kernel)
     if rows is not None:
         rmask = np.zeros(n_space, bool)
@@ -230,15 +270,14 @@ def execute_group(reader: "BullionReader", group: int, *,
             out[name] = tbl[name] if full else _take(tbl[name], local)
     rest = [c for c in columns if c not in out]
     if rest:
-        ptbl = decode_group(reader, rest, group,
-                            drop_deleted=drop_deleted, dequant=dequant)
         # drop_deleted=False means *raw row space*, always: compact-deleted
-        # pages decode short, so every column is re-aligned (erased rows
+        # pages decode short, so every page is re-aligned (erased rows
         # read 0) to keep row_ids and all columns the same length.
+        ptbl = decode_group(reader, rest, group,
+                            drop_deleted=drop_deleted, dequant=dequant,
+                            pages=pages, align_raw=not drop_deleted)
         for name in rest:
-            vals = ptbl[name] if drop_deleted \
-                else expand_raw(fv, group, name, ptbl[name])
-            out[name] = vals if full else _take(vals, local)
+            out[name] = ptbl[name] if full else _take(ptbl[name], local)
     return GroupResult(row_ids=raw_local, table=out)
 
 

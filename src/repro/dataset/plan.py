@@ -4,10 +4,11 @@ A chained ``Dataset`` records *what* the caller wants in a ``LogicalPlan``
 (pure data, no I/O). ``optimize`` normalizes it — conjunct splitting,
 projection narrowing to predicate+output columns, validation against the
 dataset schema. ``lower`` turns the optimized plan into a ``PhysicalPlan``:
-one ``ScanTask`` per (shard, row group) that could contain a matching row,
-with every avoided group accounted as *pruned bytes* (zone maps, row-id
-location, or a ``head`` limit each prove groups unreadable before any data
-pread).
+one ``ScanTask`` per (shard, row group) that could contain a matching row —
+carrying the group's surviving page ordinals when page-granular zone maps
+pruned inside it — with every avoided group *and page* accounted as pruned
+bytes (zone maps, row-id location, or a ``head`` limit each prove reads
+unnecessary before any data pread).
 """
 
 from __future__ import annotations
@@ -51,6 +52,22 @@ class OptimizedPlan:
     conjuncts: tuple[Predicate, ...]  # top-level AND split (empty = no pred)
 
 
+class ColumnNotFoundError(KeyError):
+    """A plan references a column absent from the dataset schema. Raised at
+    plan time (``optimize``), naming the column and the shard whose footer
+    defined the schema — never as a decode-time ``KeyError``."""
+
+    def __init__(self, missing, names, shard_path):
+        self.missing = list(missing)
+        self.shard_path = shard_path
+        super().__init__(
+            f"column(s) {self.missing} not in dataset schema "
+            f"(checked shard {shard_path!r}; available: {list(names)})")
+
+    def __str__(self) -> str:  # KeyError quotes its lone arg; keep prose
+        return self.args[0]
+
+
 @dataclass(frozen=True)
 class ScanTask:
     """One unit of physical work: decode+filter one row group of one shard."""
@@ -58,6 +75,9 @@ class ScanTask:
     shard: int
     group: int
     rows: Optional[np.ndarray] = None  # raw-local row ids from with_rows
+    # surviving page ordinals inside the group (page-granular zone-map
+    # pruning); None = every page of each chunk
+    pages: Optional[tuple[int, ...]] = None
 
 
 @dataclass
@@ -95,15 +115,13 @@ def optimize(plan: LogicalPlan, source: "DataSource") -> OptimizedPlan:
         output = tuple(dict.fromkeys(plan.columns))
         missing = [c for c in output if c not in source.column_set]
         if missing:
-            raise KeyError(
-                f"column(s) {missing} not in dataset (have {names})")
+            raise ColumnNotFoundError(missing, names, source.schema_path)
     conjuncts = split_conjuncts(plan.predicate)
     pred_cols = tuple(sorted(plan.predicate.columns())) if plan.predicate \
         else ()
     missing = [c for c in pred_cols if c not in source.column_set]
     if missing:
-        raise KeyError(
-            f"predicate column(s) {missing} not in dataset (have {names})")
+        raise ColumnNotFoundError(missing, names, source.schema_path)
     if plan.limit is not None and plan.limit < 0:
         raise ValueError(f"head(n) needs n >= 0, got {plan.limit}")
     if plan.groups is not None and source.n_shards > 1:
@@ -172,8 +190,10 @@ def lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
             for g in groups:
                 if g not in located:
                     phys.groups_pruned += 1
-                    phys.pages_pruned += scan_plan.group_pages.get(g, 0)
-                    phys.bytes_pruned += scan_plan.group_bytes.get(g, 0)
+                    # charge only what page-granular pruning didn't already
+                    pages_left, bytes_left = scan_plan.remaining_cost(g)
+                    phys.pages_pruned += pages_left
+                    phys.bytes_pruned += bytes_left
             groups = [g for g in groups if g in located]
         if remaining is not None and plan.predicate is None:
             # head(n) with no predicate: the row count per group is knowable
@@ -182,8 +202,9 @@ def lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
             for g in groups:
                 if remaining <= 0:
                     phys.groups_pruned += 1
-                    phys.pages_pruned += scan_plan.group_pages.get(g, 0)
-                    phys.bytes_pruned += scan_plan.group_bytes.get(g, 0)
+                    pages_left, bytes_left = scan_plan.remaining_cost(g)
+                    phys.pages_pruned += pages_left
+                    phys.bytes_pruned += bytes_left
                     continue
                 kept.append(g)
                 if located is not None:
@@ -202,6 +223,7 @@ def lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
             groups = kept
         phys.tasks.extend(
             ScanTask(shard=s, group=g,
-                     rows=located[g] if located is not None else None)
+                     rows=located[g] if located is not None else None,
+                     pages=scan_plan.group_page_sel.get(g))
             for g in groups)
     return phys

@@ -2,7 +2,8 @@
 
 ``Dataset.write_to`` executes any optimized ``LogicalPlan`` — filters,
 projections, ``head`` limits, and dequantization compose with rewrite — and
-materializes the surviving rows into a fresh sharded v1 dataset:
+materializes the surviving rows into a fresh sharded dataset in the current
+format (v2: multi-page chunks with a page index and zone maps):
 
 * **compliance purge** — the executor resolves merge-on-read deletion
   vectors while streaming, so deleted rows are physically absent from the
@@ -123,6 +124,7 @@ def _permute(table: dict, perm: np.ndarray) -> dict:
 def write_dataset(ds: "Dataset", out_dir: str, *,
                   shard_rows: Optional[int] = None,
                   rows_per_group: Optional[int] = None,
+                  page_rows: Optional[int] = None,
                   sort_by: Optional[SortBy] = None,
                   compliance: Optional[int] = None,
                   parallelism: int = 1,
@@ -130,10 +132,14 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
                   use_advisor: bool = True) -> WriteResult:
     """Execute ``ds``'s plan and materialize the result under ``out_dir``.
 
-    See ``Dataset.write_to`` for the user-facing contract. ``compliance``
-    and ``rows_per_group`` default to the input's values (shard 0's
-    footer); ``collect_stats=False`` writes v0 shards (the backward-compat
-    target), so ``write_to`` also upgrades v0 datasets to v1 by default.
+    See ``Dataset.write_to`` for the user-facing contract. ``compliance``,
+    ``rows_per_group``, and ``page_rows`` default to the input's values
+    (shard 0's footer; pre-page-index inputs fall back to the writer
+    default); ``collect_stats=False`` writes v0 shards (the backward-compat
+    target), so ``write_to`` also upgrades v0 datasets to the current
+    format by default.
+    Output chunks are split into pages of ``page_rows`` rows, each encoded
+    independently with per-page stats feeding the encoding advisor.
     """
     opt = ds.plan()
     if not opt.output_columns:
@@ -148,6 +154,9 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
     fv = src.footer(0)
     if rows_per_group is None:
         rows_per_group = int(fv.meta[4]) or 65536
+    if page_rows is None:
+        recorded = fv.props().get("bullion.page_rows")
+        page_rows = int(recorded) if recorded else None
     if compliance is None:
         compliance = fv.compliance
     schema = output_schema(src, opt.output_columns, opt.logical.dequantize)
@@ -171,7 +180,7 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
         result.paths.append(path)
         result.rows_per_shard.append(0)
         return BullionWriter(path, schema, rows_per_group=rows_per_group,
-                             compliance=compliance,
+                             page_rows=page_rows, compliance=compliance,
                              collect_stats=collect_stats, stream=True,
                              encoding_advisor=advisor,
                              props={"bullion.sink": "write_to"})

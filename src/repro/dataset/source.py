@@ -159,14 +159,21 @@ class DataSource:
     def num_rows(self) -> int:
         return int(self._row_offsets[-1])
 
-    def credit_pruned(self, nbytes: int) -> None:
+    @property
+    def schema_path(self) -> str:
+        """The shard whose footer defines the dataset schema (shard 0)."""
+        return self.paths[0]
+
+    def credit_pruned(self, nbytes: int, npages: int = 0) -> None:
         """Account plan-proven avoided I/O without opening any reader.
         For a borrowed reader (legacy shims), the credit must land on the
         caller's IOStats — this source is discarded right after the call."""
         if not self.owns_readers:
             self._readers[0].stats.bytes_pruned += int(nbytes)
+            self._readers[0].stats.pages_pruned += int(npages)
         else:
-            self._retired.append(IOStats(bytes_pruned=int(nbytes)))
+            self._retired.append(IOStats(bytes_pruned=int(nbytes),
+                                         pages_pruned=int(npages)))
 
     # -- lifecycle --------------------------------------------------------------
     def close(self) -> None:
@@ -191,4 +198,5 @@ class DataSource:
             total.footer_bytes += st.footer_bytes
             total.metadata_seconds += st.metadata_seconds
             total.bytes_pruned += st.bytes_pruned
+            total.pages_pruned += st.pages_pruned
         return total

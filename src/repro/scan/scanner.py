@@ -1,10 +1,14 @@
 """Statistics-driven pruning scanner: the planning half of the scan path.
 
-``Scanner.plan`` intersects a predicate with the file's chunk zone maps
-(``Sec.CHUNK_STATS``): groups that provably contain no matching row are
-pruned before any data pread, and the plan accounts the pages and bytes
-those groups would have cost. On stat-less (v0) files every group survives
-and the scan degrades to a plain filtered read.
+``Scanner.plan`` intersects a predicate with the file's zone maps at two
+granularities. Chunk zone maps (``Sec.CHUNK_STATS``) prune whole row groups
+that provably contain no matching row; inside surviving groups, per-page
+zone maps (``Sec.PAGE_STATS``) prune individual page ordinals — every
+column of a group splits at the same row boundaries, so one refuted ordinal
+drops one page per read column (``ScanPlan.group_page_sel``). All pruning
+happens before any data pread, and the plan accounts the pages and bytes it
+avoided. On stat-less (v0) files every group survives and the scan degrades
+to a plain filtered read; single-page files simply never page-prune.
 
 Execution — decode, deletion-masking, dequantization, predicate filtering,
 payload gathering — lives in ``repro.dataset.executor.execute_group``, the
@@ -42,6 +46,19 @@ class ScanPlan:
     bytes_total: int = 0
     group_pages: dict = field(default_factory=dict)   # group -> page count
     group_bytes: dict = field(default_factory=dict)   # group -> data bytes
+    # group -> surviving page ordinals, only for groups where page zone maps
+    # pruned a strict subset (absent = read every page of the chunk)
+    group_page_sel: dict = field(default_factory=dict)
+    # group -> (pages, bytes) already credited to pages/bytes_pruned by
+    # page-granular pruning — a later pass dropping the whole group must
+    # charge only the remainder, not the full group cost again
+    group_avoided: dict = field(default_factory=dict)
+
+    def remaining_cost(self, group: int) -> tuple[int, int]:
+        """(pages, bytes) of ``group`` not yet counted as pruned."""
+        pages, nbytes = self.group_avoided.get(group, (0, 0))
+        return (self.group_pages.get(group, 0) - pages,
+                self.group_bytes.get(group, 0) - nbytes)
 
     @property
     def selectivity_bound(self) -> float:
@@ -76,11 +93,57 @@ def _pages_for(fv, group: int, cols: Sequence[str]) -> list[int]:
     return out
 
 
+def _page_prune(fv, group: int, pred: Predicate, pred_cols: Sequence[str],
+                read_cols: Sequence[str], page_size: np.ndarray
+                ) -> tuple[Optional[tuple[int, ...]], int, int]:
+    """Page-granular refinement inside a group the chunk zone maps kept.
+
+    Every column of a group splits at the same row boundaries (the writer's
+    page_rows budget), so page ordinal k is one row range across all read
+    columns: an ordinal whose per-page stats refute the predicate drops one
+    page *per read column*. Returns (surviving ordinals or None for all,
+    pages avoided, bytes avoided); degrades to None (no page pruning) on
+    stat-less files, single-page chunks, or — defensively — chunks whose
+    page row boundaries disagree."""
+    page_stats = fv.page_stats()
+    if page_stats is None:
+        return None, 0, 0
+    page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
+    starts: dict[str, int] = {}
+    # column 0 anchors the executor's ordinal -> raw-row-range mapping
+    # (``selected_raw_rows``/``group_keep``), so its boundaries must agree
+    # with every read column before any ordinal may be dropped
+    s0, e0 = fv.chunk_pages(group, 0)
+    first_rows: np.ndarray = page_rows[s0:e0]
+    for name in read_cols:
+        s, e = fv.chunk_pages(group, fv.column_index(name))
+        starts[name] = s
+        if not np.array_equal(page_rows[s:e], first_rows):
+            return None, 0, 0
+    n_ord = len(first_rows)
+    if n_ord <= 1:
+        return None, 0, 0
+    surviving: list[int] = []
+    pages_avoided = bytes_avoided = 0
+    for k in range(n_ord):
+        stats = {name: page_stats[starts[name] + k] for name in pred_cols}
+        if pred.maybe_any(stats):
+            surviving.append(k)
+        else:
+            pages_avoided += len(read_cols)
+            bytes_avoided += int(sum(int(page_size[starts[name] + k])
+                                     for name in read_cols))
+    if len(surviving) == n_ord:
+        return None, 0, 0
+    return tuple(surviving), pages_avoided, bytes_avoided
+
+
 def plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
               groups: Optional[Sequence[int]] = None) -> ScanPlan:
     """Footer-only zone-map planning (needs no open file handle):
-    intersect ``pred`` with the chunk zone maps and account the page/byte
-    cost of every candidate group. ``pred=None`` prunes nothing."""
+    intersect ``pred`` with the chunk zone maps — and, inside surviving
+    groups, with the per-page zone maps — and account the page/byte cost of
+    every candidate group. ``pred=None`` prunes nothing."""
     pred_cols = sorted(pred.columns()) if pred is not None else []
     read_cols = list(dict.fromkeys([*pred_cols, *columns]))
     candidates = list(groups) if groups is not None \
@@ -94,12 +157,29 @@ def plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
         plan.bytes_total += nbytes
         plan.group_pages[g] = len(pages)
         plan.group_bytes[g] = nbytes
-        if pred is None or pred.maybe_any(_group_stats(fv, g, pred_cols)):
-            plan.groups.append(g)
-        else:
+        if pred is not None and \
+                not pred.maybe_any(_group_stats(fv, g, pred_cols)):
             plan.pruned_groups.append(g)
             plan.pages_pruned += len(pages)
             plan.bytes_pruned += nbytes
+            continue
+        sel = None
+        if pred is not None:
+            sel, pages_avoided, bytes_avoided = \
+                _page_prune(fv, g, pred, pred_cols, read_cols, page_size)
+            if sel is not None and not sel:
+                # per-page maps are tighter than their chunk union: every
+                # ordinal refuted -> the whole group is provably empty
+                plan.pruned_groups.append(g)
+                plan.pages_pruned += len(pages)
+                plan.bytes_pruned += nbytes
+                continue
+            if sel is not None:
+                plan.group_page_sel[g] = sel
+                plan.group_avoided[g] = (pages_avoided, bytes_avoided)
+                plan.pages_pruned += pages_avoided
+                plan.bytes_pruned += bytes_avoided
+        plan.groups.append(g)
     return plan
 
 
@@ -143,11 +223,13 @@ class Scanner:
 
         plan = self.plan(pred, columns, groups)
         self.reader.stats.bytes_pruned += plan.bytes_pruned
+        self.reader.stats.pages_pruned += plan.pages_pruned
         bounds = group_bounds(self.fv)
         for g in plan.groups:
             res = execute_group(self.reader, g, columns=columns,
                                 predicate=pred, drop_deleted=drop_deleted,
-                                dequant=dequant, use_kernel=use_kernel)
+                                dequant=dequant, use_kernel=use_kernel,
+                                pages=plan.group_page_sel.get(g))
             if res is None:
                 continue
             yield ScanBatch(group=g, row_ids=bounds[g] + res.row_ids,

@@ -10,9 +10,10 @@ pruning decisions stay sound, they just lose at most one ULP of selectivity.
 Records describe the *logical* value domain (post quantize->dequantize for
 quantized columns), i.e. exactly what ``BullionReader`` hands back with
 ``dequant=True``, so predicate evaluation and zone-map pruning agree. The
-distinct estimate is exact per page today (pages are bounded by
-rows_per_group) and doubles as the input signal for a future LEA-style
-encoding advisor.
+distinct estimate is exact per page (pages are bounded by the writer's
+``page_rows`` budget; the chunk-level merge is an upper bound, not a union
+cardinality) and doubles as the input signal for the stats-driven encoding
+advisor, which now scores every page independently.
 """
 
 from __future__ import annotations

@@ -1,0 +1,441 @@
+"""Multi-page chunk tests: page-index round-trips, page-granular pruning,
+mixed-version datasets (v0 / single-page v1 / multi-page v2 in one glob),
+compaction round-trips, loader shard striping, plan-time column errors."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import BullionReader, BullionWriter, ColumnSpec
+from repro.core.deletion import verify_deleted
+from repro.core.footer import (FORMAT_V0, FORMAT_V1, FORMAT_V2,
+                               FooterBuilder, MAGIC, Sec, read_footer)
+from repro.dataset import dataset
+from repro.dataset.plan import ColumnNotFoundError
+from repro.scan import C
+
+
+def _write(path, *, n=1000, rows_per_group=256, page_rows=None,
+           collect_stats=True, id_base=0, seed=0):
+    """Clustered table (sorted ids) with scalar, list, and string columns."""
+    rng = np.random.default_rng(seed)
+    schema = [
+        ColumnSpec("id", "int64"),
+        ColumnSpec("val", "float32"),
+        ColumnSpec("seq", "list<int64>"),
+        ColumnSpec("tag", "string"),
+    ]
+    table = {
+        "id": np.arange(id_base, id_base + n, dtype=np.int64),
+        "val": rng.random(n).astype(np.float32),
+        "seq": [rng.integers(0, 50, int(rng.integers(0, 5))).astype(np.int64)
+                for _ in range(n)],
+        "tag": [b"t%d" % (i % 7) for i in range(n)],
+    }
+    w = BullionWriter(path, schema, rows_per_group=rows_per_group,
+                      page_rows=page_rows, collect_stats=collect_stats)
+    w.write_table(table)
+    w.close()
+    return table
+
+
+def _strip_page_index(path):
+    """Rewrite the footer without ``Sec.CHUNK_PAGE_COUNT`` (and with the
+    matching pre-v2 version word), emulating a file written before the page
+    index existed. Only valid for single-page-per-chunk files."""
+    fv, foot_off = read_footer(path)
+    fb = FooterBuilder()
+    for sid in Sec:
+        if fv.has(sid) and sid != Sec.CHUNK_PAGE_COUNT:
+            fb.put(sid, bytes(fv.raw(sid)))
+    meta = fv.meta.copy()
+    meta[7] = FORMAT_V1 if fv.has_stats else FORMAT_V0
+    fb.put(Sec.META, meta)
+    footer = fb.build()
+    with open(path, "r+b") as f:
+        f.seek(foot_off)
+        f.write(footer)
+        f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        f.truncate()
+
+
+def _assert_tables_equal(got, want):
+    assert np.array_equal(got["id"], want["id"])
+    assert np.allclose(got["val"], want["val"])
+    assert all(np.array_equal(a, b) for a, b in zip(got["seq"], want["seq"]))
+    assert got["tag"] == want["tag"]
+
+
+# ---------------------------------------------------------------------------
+# format round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_multipage_roundtrip_all_kinds(tmp_path):
+    path = str(tmp_path / "mp.bln")
+    table = _write(path, n=1000, rows_per_group=256, page_rows=32)
+    fv, _ = read_footer(path)
+    for g in range(fv.n_groups):
+        rows = int(fv.arr(Sec.ROWS_PER_GROUP, np.uint32)[g])
+        for c in range(fv.n_cols):
+            s, e = fv.chunk_pages(g, c)
+            assert e - s == -(-rows // 32)          # ceil(rows / page_rows)
+            assert int(fv.chunk_page_rows(g, c).sum()) == rows
+    with dataset(path) as ds:
+        _assert_tables_equal(ds.to_table(), table)
+
+
+def test_page_rows_clamped_to_group(tmp_path):
+    path = str(tmp_path / "one.bln")
+    _write(path, n=500, rows_per_group=250, page_rows=10_000)
+    fv, _ = read_footer(path)
+    for g in range(fv.n_groups):
+        for c in range(fv.n_cols):
+            s, e = fv.chunk_pages(g, c)
+            assert e - s == 1                       # degenerate single-page
+
+
+def test_reads_file_without_page_index(tmp_path):
+    """Pre-v2 footers (no CHUNK_PAGE_COUNT) read as one page per chunk."""
+    path = str(tmp_path / "v1.bln")
+    table = _write(path, n=600, rows_per_group=200, page_rows=200)
+    _strip_page_index(path)
+    fv, _ = read_footer(path)
+    assert not fv.has(Sec.CHUNK_PAGE_COUNT)
+    assert fv.format_version == FORMAT_V1
+    assert fv.chunk_pages(1, 2) == (fv.chunk_pages(1, 2)[0],
+                                    fv.chunk_pages(1, 2)[0] + 1)
+    with dataset(path) as ds:
+        _assert_tables_equal(ds.to_table(), table)
+    with dataset(path) as ds:
+        got = ds.where(C("id") == 321).select(["id", "val"]).to_table()
+        assert got["id"].tolist() == [321]
+
+
+# ---------------------------------------------------------------------------
+# page-granular pruning
+# ---------------------------------------------------------------------------
+
+
+def test_page_pruning_reads_fewer_bytes_same_rows(tmp_path):
+    layouts = {}
+    for label, pr in (("single", 512), ("multi", 64)):
+        path = str(tmp_path / f"{label}.bln")
+        _write(path, n=4096, rows_per_group=512, page_rows=pr, seed=1)
+        with dataset(path) as ds:
+            q = ds.where(C("id") == 1234).select(["id", "val"])
+            tbl = q.to_table()
+            phys = q.physical_plan()
+            st = ds.stats
+            layouts[label] = (tbl, phys, st.bytes_read - st.footer_bytes,
+                              st.pages_pruned)
+    (stbl, sphys, sbytes, spages) = layouts["single"]
+    (mtbl, mphys, mbytes, mpages) = layouts["multi"]
+    assert np.array_equal(mtbl["id"], stbl["id"])
+    assert np.array_equal(mtbl["val"], stbl["val"])
+    # same group pruning, plus page pruning inside the surviving group
+    assert mphys.groups_pruned == sphys.groups_pruned
+    assert mphys.pages_pruned > sphys.pages_pruned
+    assert mbytes < sbytes
+    assert mpages > 0
+    assert any(t.pages is not None for t in mphys.tasks)
+    assert "page-subset task(s)" in dataset(str(tmp_path / "multi.bln")) \
+        .where(C("id") == 1234).explain()
+
+
+def test_page_pruning_row_ids_stay_raw(tmp_path):
+    """Row ids from a page-subset scan are global raw ids, identical to an
+    unpruned evaluation of the same predicate."""
+    path = str(tmp_path / "ids.bln")
+    table = _write(path, n=2048, rows_per_group=512, page_rows=64, seed=2)
+    pred = (C("id") >= 700) & (C("id") <= 707)
+    with dataset(path) as ds:
+        ids = ds.where(pred).row_ids()
+    expect = np.flatnonzero((table["id"] >= 700) & (table["id"] <= 707))
+    assert np.array_equal(ids, expect)
+
+
+def test_page_pruning_with_deletions(tmp_path):
+    path = str(tmp_path / "del.bln")
+    _write(path, n=2048, rows_per_group=512, page_rows=64, seed=3)
+    with dataset(path) as ds:
+        ds.delete_where(C("id").isin([100, 101, 1500]))
+    with dataset(path) as ds:
+        got = ds.where((C("id") >= 99) & (C("id") <= 103)) \
+            .select(["id"]).to_table()
+        assert got["id"].tolist() == [99, 102, 103]
+        assert ds.stats.pages_pruned > 0
+
+
+def test_with_rows_drop_does_not_overcount_pruning(tmp_path):
+    """A group kept by the predicate (with page-level pruning credited) but
+    dropped by with_rows location must charge only the *remaining* pages."""
+    path = str(tmp_path / "acct.bln")
+    _write(path, n=2048, rows_per_group=512, page_rows=64, seed=4)
+    with dataset(path) as ds:
+        # predicate pins group 0 (with a page subset); the pinned row lives
+        # in group 2, so group 0 is then dropped by row location
+        q = ds.where(C("id") == 5).with_rows([1500])
+        phys = q.physical_plan()
+        assert 0 <= phys.pages_pruned <= phys.pages_total
+        assert 0 <= phys.bytes_pruned <= phys.bytes_total
+        assert q.count_rows() == 0
+
+
+def test_stat_less_files_stay_v0_shaped(tmp_path):
+    """collect_stats=False (the backward-compat target) writes a true v0
+    layout: one page per chunk, FORMAT_V0 version word — regardless of the
+    BULLION_PAGE_ROWS environment; an *explicit* multi-page request without
+    stats is stamped as a stat-less v2, never a fake v0."""
+    p0 = str(tmp_path / "v0.bln")
+    _write(p0, n=600, rows_per_group=200, collect_stats=False)
+    fv, _ = read_footer(p0)
+    assert fv.format_version == FORMAT_V0 and not fv.has_stats
+    for g in range(fv.n_groups):
+        for c in range(fv.n_cols):
+            s, e = fv.chunk_pages(g, c)
+            assert e - s == 1
+    p2 = str(tmp_path / "v2_nostats.bln")
+    table = _write(p2, n=600, rows_per_group=200, page_rows=50,
+                   collect_stats=False)
+    fv2, _ = read_footer(p2)
+    assert fv2.format_version == FORMAT_V2 and not fv2.has_stats
+    assert fv2.chunk_pages(0, 0) == (0, 4)
+    with dataset(p2) as ds:
+        _assert_tables_equal(ds.to_table(), table)
+
+
+def test_level1_then_level2_delete_keeps_pages_readable(tmp_path):
+    """An L1 (DV-only) delete followed by an L2 delete on the same page must
+    not accept a compact in-place mask that removes only the new rows — the
+    decoded length would track neither page convention. The page relocates
+    with the prior DV rows unioned in, and every column stays readable."""
+    from repro.core.deletion import Compliance, delete_rows
+    path = str(tmp_path / "l1l2.bln")
+    rng = np.random.default_rng(6)
+    # irregular runs -> RLE pages whose compact mask rule would fire
+    vals = np.repeat(rng.integers(1, 40, 60),
+                     rng.integers(2, 20, 60))[:446].astype(np.int64)
+    w = BullionWriter(path, [ColumnSpec("x", "int64")], rows_per_group=446,
+                      page_rows=446)
+    w.write_table({"x": vals})
+    w.close()
+    delete_rows(path, np.array([0, 1, 2]), Compliance.LEVEL1)
+    delete_rows(path, np.array([10, 11, 12]), Compliance.LEVEL2)
+    with dataset(path) as ds:
+        got = ds.select(["x"]).to_table()["x"]
+    keep = np.ones(len(vals), bool)
+    keep[[0, 1, 2, 10, 11, 12]] = False
+    assert np.array_equal(got, vals[keep])
+
+
+# ---------------------------------------------------------------------------
+# mixed-version datasets
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def mixed_dir(tmp_path):
+    """One glob holding a v0 shard (stat-less, no page index), a single-page
+    v1 shard (stats, no page index), and a multi-page v2 shard."""
+    d = tmp_path / "mixed"
+    d.mkdir()
+    t0 = _write(str(d / "part-000.bln"), n=600, rows_per_group=200,
+                page_rows=200, collect_stats=False, id_base=0, seed=10)
+    _strip_page_index(str(d / "part-000.bln"))
+    t1 = _write(str(d / "part-001.bln"), n=600, rows_per_group=200,
+                page_rows=200, collect_stats=True, id_base=600, seed=11)
+    _strip_page_index(str(d / "part-001.bln"))
+    t2 = _write(str(d / "part-002.bln"), n=600, rows_per_group=200,
+                page_rows=25, collect_stats=True, id_base=1200, seed=12)
+    fvs = [read_footer(str(d / f"part-{i:03d}.bln"))[0] for i in range(3)]
+    assert fvs[0].format_version == FORMAT_V0 and not fvs[0].has_stats
+    assert fvs[1].format_version == FORMAT_V1 and fvs[1].has_stats
+    assert fvs[2].has(Sec.CHUNK_PAGE_COUNT)
+    tables = {k: (list(t0[k]) + list(t1[k]) + list(t2[k]))
+              if isinstance(t0[k], list)
+              else np.concatenate([t0[k], t1[k], t2[k]])
+              for k in t0}
+    return str(d), tables
+
+
+def test_mixed_versions_scan_matches_serial_single_page(mixed_dir):
+    d, tables = mixed_dir
+    pred = (C("id") >= 550) & (C("id") < 1300)
+    with dataset(os.path.join(d, "part-*.bln")) as ds:
+        serial = ds.where(pred).select(["id", "val", "seq", "tag"]) \
+            .to_table()
+    with dataset(os.path.join(d, "part-*.bln")) as ds:
+        parallel = ds.where(pred).select(["id", "val", "seq", "tag"]) \
+            .to_table(parallelism=4)
+    keep = (tables["id"] >= 550) & (tables["id"] < 1300)
+    want = {
+        "id": tables["id"][keep],
+        "val": tables["val"][keep],
+        "seq": [s for s, k in zip(tables["seq"], keep) if k],
+        "tag": [t for t, k in zip(tables["tag"], keep) if k],
+    }
+    _assert_tables_equal(serial, want)
+    _assert_tables_equal(parallel, want)
+
+
+def test_mixed_versions_compact_and_audit(mixed_dir, tmp_path):
+    d, tables = mixed_dir
+    out = str(tmp_path / "compacted")
+    with dataset(os.path.join(d, "part-*.bln")) as ds:
+        res = ds.write_to(out, shard_rows=700, page_rows=50)
+    assert res.rows == len(tables["id"])
+    with dataset(out) as ds:
+        _assert_tables_equal(ds.to_table(), tables)
+    # compliance delete on the compacted output; the purge audit must still
+    # hold on the multi-page layout
+    victims = [10, 650, 1250]
+    with dataset(out) as ds:
+        ds.delete_where(C("id").isin(victims))
+    for path in sorted(os.listdir(out)):
+        audit = verify_deleted(os.path.join(out, path), "id", victims)
+        assert audit["visible_rows"] == 0
+        assert audit["raw_occurrences"] == 0
+    with dataset(out) as ds:
+        left = ds.select(["id"]).to_table()["id"]
+    assert not np.isin(left, victims).any()
+    assert len(left) == len(tables["id"]) - len(victims)
+
+
+# ---------------------------------------------------------------------------
+# loader rank striping
+# ---------------------------------------------------------------------------
+
+
+def _loader_shards(loader):
+    return {loader._tasks[g].shard for g in loader._my_groups(0)}
+
+
+def test_loader_stripes_ranks_across_shards(tmp_path):
+    from repro.data.loader import BullionLoader
+    from repro.data.synthetic import write_lm_corpus
+    d = tmp_path / "corpus"
+    d.mkdir()
+    for s in range(4):
+        write_lm_corpus(str(d / f"part-{s:03d}.bln"), n_docs=32, vocab=64,
+                        doc_len=64, rows_per_group=8, seed=s)
+    loaders = [BullionLoader(str(d), batch_size=2, seq_len=16,
+                             rank=r, world=2) for r in range(2)]
+    try:
+        shard_sets = [_loader_shards(ld) for ld in loaders]
+        assert shard_sets[0] & shard_sets[1] == set()      # disjoint files
+        assert shard_sets[0] | shard_sets[1] == {0, 1, 2, 3}
+        covered = set(loaders[0]._my_groups(0)) | set(loaders[1]._my_groups(0))
+        assert covered == set(loaders[0]._groups)          # nothing dropped
+    finally:
+        for ld in loaders:
+            ld.close()
+
+
+def test_loader_never_starves_a_rank_when_pruning_empties_shards(tmp_path):
+    """Shard striping must consider only *surviving* shards: with a
+    predicate whose zone maps prune one shard entirely, both ranks still
+    get work (group-striping fallback) instead of one rank spinning with
+    zero groups."""
+    from repro.data.loader import BullionLoader
+    from repro.scan import C as Col
+    d = tmp_path / "lopsided"
+    d.mkdir()
+    # doc_id is clustered per shard: shard 0 holds [0, 32), shard 1 [1000+)
+    for s, base in ((0, 0), (1, 1000)):
+        w = BullionWriter(str(d / f"part-{s:03d}.bln"),
+                          [ColumnSpec("doc_id", "int64"),
+                           ColumnSpec("tokens", "list<int32>")],
+                          rows_per_group=8)
+        w.write_table({
+            "doc_id": np.arange(base, base + 32, dtype=np.int64),
+            "tokens": [np.arange(16, dtype=np.int32)] * 32,
+        })
+        w.close()
+    loaders = [BullionLoader(str(d), batch_size=2, seq_len=4, rank=r,
+                             world=2, predicate=Col("doc_id") < 100)
+               for r in range(2)]
+    try:
+        mine = [set(ld._my_groups(0)) for ld in loaders]
+        assert mine[0] and mine[1]                  # no starved rank
+        assert mine[0] & mine[1] == set()
+        assert mine[0] | mine[1] == set(loaders[0]._groups)
+    finally:
+        for ld in loaders:
+            ld.close()
+
+
+def test_page_pruning_skipped_when_col0_boundaries_disagree(tmp_path):
+    """Defensive planner guard: a (foreign/corrupted) footer whose column-0
+    page boundaries disagree with the read columns must fall back to
+    whole-chunk reads — never emit a page subset the executor would map
+    through the wrong row ranges (``selected_raw_rows`` anchors on column
+    0)."""
+    path = str(tmp_path / "skew.bln")
+    w = BullionWriter(path, [ColumnSpec("a", "int64"),
+                             ColumnSpec("b", "int64")],
+                      rows_per_group=512, page_rows=64)
+    w.write_table({"a": np.arange(1024, dtype=np.int64),
+                   "b": np.arange(1024, dtype=np.int64)})
+    w.close()
+    with dataset(path) as ds:                 # positive control: aligned
+        phys = ds.where(C("b") == 700).select(["b"]).physical_plan()
+        assert any(t.pages is not None for t in phys.tasks)
+    fv, foot_off = read_footer(path)
+    rows = fv.arr(Sec.PAGE_ROWS, np.uint32).copy()
+    s, _ = fv.chunk_pages(1, 0)               # column 0's chunk in group 1
+    rows[s], rows[s + 1] = 32, 96             # same sum, shifted boundary
+    fb = FooterBuilder()
+    for sid in Sec:
+        if fv.has(sid):
+            fb.put(sid, bytes(fv.raw(sid)))
+    fb.put(Sec.PAGE_ROWS, rows)
+    footer = fb.build()
+    with open(path, "r+b") as f:
+        f.seek(foot_off)
+        f.write(footer)
+        f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        f.truncate()
+    with dataset(path) as ds:
+        q = ds.where(C("b") == 700).select(["b"])   # row 700 -> group 1
+        phys = q.physical_plan()
+        assert phys.tasks and all(t.pages is None for t in phys.tasks)
+        assert q.to_table()["b"].tolist() == [700]  # still correct, unpruned
+
+
+def test_loader_falls_back_to_group_striping(tmp_path):
+    from repro.data.loader import BullionLoader
+    from repro.data.synthetic import write_lm_corpus
+    path = str(tmp_path / "single.bln")
+    write_lm_corpus(path, n_docs=32, vocab=64, doc_len=64, rows_per_group=8)
+    loaders = [BullionLoader(path, batch_size=2, seq_len=16,
+                             rank=r, world=2) for r in range(2)]
+    try:
+        mine = [set(ld._my_groups(0)) for ld in loaders]
+        assert mine[0] & mine[1] == set()
+        assert mine[0] | mine[1] == set(loaders[0]._groups)
+        assert mine[0] and mine[1]                  # both ranks get work
+    finally:
+        for ld in loaders:
+            ld.close()
+
+
+# ---------------------------------------------------------------------------
+# plan-time schema errors
+# ---------------------------------------------------------------------------
+
+
+def test_missing_column_error_names_column_and_shard(tmp_path):
+    path = str(tmp_path / "err.bln")
+    _write(path, n=100, rows_per_group=50)
+    with dataset(path) as ds:
+        with pytest.raises(ColumnNotFoundError) as ei:
+            ds.select(["id", "nope"]).to_table()
+        assert "nope" in str(ei.value) and "err.bln" in str(ei.value)
+        with pytest.raises(KeyError):               # stays a KeyError
+            ds.select(["nope"]).to_table()
+        with pytest.raises(ColumnNotFoundError) as ei:
+            ds.where(C("ghost") > 1).count_rows()
+        assert "ghost" in str(ei.value) and "err.bln" in str(ei.value)

@@ -15,7 +15,8 @@ from repro.scan import (C, HAS_MINMAX, In, LIST_ELEMENTS, STAT_DTYPE,
                         stats_record)
 
 
-def _write(path, *, n=4000, rows_per_group=500, collect_stats=True, seed=0):
+def _write(path, *, n=4000, rows_per_group=500, collect_stats=True, seed=0,
+           page_rows=None):
     """Clustered synthetic table: sorted ids -> disjoint per-group ranges."""
     rng = np.random.default_rng(seed)
     schema = [
@@ -34,7 +35,7 @@ def _write(path, *, n=4000, rows_per_group=500, collect_stats=True, seed=0):
         "tag": [b"t%d" % (i % 13) for i in range(n)],
     }
     w = BullionWriter(path, schema, rows_per_group=rows_per_group,
-                      collect_stats=collect_stats)
+                      collect_stats=collect_stats, page_rows=page_rows)
     w.write_table(table)
     w.close()
     return table
@@ -46,8 +47,9 @@ def _write(path, *, n=4000, rows_per_group=500, collect_stats=True, seed=0):
 
 
 def test_stats_roundtrip(tmp_path):
+    # single-page layout: chunk stats == page stats, distinct counts exact
     path = str(tmp_path / "t.bln")
-    table = _write(path, n=2000, rows_per_group=500)
+    table = _write(path, n=2000, rows_per_group=500, page_rows=500)
     fv, _ = read_footer(path)
     assert fv.format_version == FORMAT_VERSION
     assert fv.has_stats
@@ -73,7 +75,8 @@ def test_stats_roundtrip(tmp_path):
         trec = cs[g * n_cols + fv.column_index("tag")]
         assert not (int(trec["flags"]) & HAS_MINMAX)
         assert int(trec["distinct"]) == 13
-    # page stats agree with chunk stats (one page per chunk today)
+    # page stats agree with chunk stats (single-page layout: the degenerate
+    # case where a chunk is exactly one page)
     for g in range(fv.n_groups):
         for c in range(n_cols):
             s, e = fv.chunk_pages(g, c)
