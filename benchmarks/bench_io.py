@@ -1,0 +1,154 @@
+"""Pipelined I/O benchmark: plan-wide byte-range scheduling vs serial reads.
+
+A matrix of (wide projection, selective point probe) x (serial ``io_depth=1``,
+pipelined ``io_depth=4``) over a multi-shard dataset. The wide projection is
+the acceptance probe: the scheduler coalesces page ranges across row-group
+boundaries and overlaps group k+1's preads with group k's decode, so it must
+issue >= 2x fewer data preads than the serial per-group path with
+*byte-identical* results, and the wall-clock delta is reported. Only the
+pread ratio is gated: on smoke-sized, page-cache-warm tmp files the saved
+syscalls are nearly free, so wall clock hovers around parity there (the
+scheduler's win is batched submission on cold/real storage) — the CSV
+records the time trajectory either way. Also probes
+the process-wide footer cache: a repeated ``dataset()`` open of unchanged
+shards parses nothing and issues zero footer preads
+(``IOStats.footer_cache_hits``).
+
+``BULLION_BENCH_SMOKE=1`` shrinks the dataset for CI smoke runs (same code
+path and CSV schema, smaller constants)."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BullionWriter, ColumnSpec
+from repro.dataset import clear_footer_cache, dataset
+from repro.scan import C
+
+IO_DEPTH = 4
+
+
+def _write_shards(d: str, n_shards: int, rows_per_shard: int,
+                  rows_per_group: int, n_payload: int) -> None:
+    """Clustered ids + a wide block of float payload columns per shard."""
+    os.makedirs(d)
+    schema = [ColumnSpec("id", "int64")] + \
+        [ColumnSpec(f"f{i:02d}", "float32") for i in range(n_payload)]
+    for s in range(n_shards):
+        rng = np.random.default_rng(s)
+        w = BullionWriter(os.path.join(d, f"part-{s:04d}.bln"), schema,
+                          rows_per_group=rows_per_group,
+                          page_rows=max(1, rows_per_group // 4))
+        w.write_table({
+            "id": np.arange(s * rows_per_shard, (s + 1) * rows_per_shard,
+                            dtype=np.int64),
+            **{f"f{i:02d}": rng.random(rows_per_shard).astype(np.float32)
+               for i in range(n_payload)},
+        })
+        w.close()
+
+
+def run(report):
+    smoke = bool(os.environ.get("BULLION_BENCH_SMOKE"))
+    n_shards = 4 if smoke else 8
+    rows_per_group = 512 if smoke else 2048
+    groups_per_shard = 8
+    rows_per_shard = rows_per_group * groups_per_shard
+    n_payload = 6 if smoke else 12
+    cols = ["id"] + [f"f{i:02d}" for i in range(n_payload)]
+
+    with tempfile.TemporaryDirectory() as td:
+        d = os.path.join(td, "shards")
+        _write_shards(d, n_shards, rows_per_shard, rows_per_group, n_payload)
+
+        # footer preads are 2 per shard on a cold cache; clear it before
+        # each measured run so serial and pipelined pay the same metadata
+        # cost and the pread ratio isolates the data path
+        def measure(build, io_depth):
+            """Cold-cache run: footer preads (2 per shard a plan opens) are
+            identical between serial and pipelined, so raw pread deltas and
+            the post-hoc ``- 2 * n_shards`` correction (full scans open
+            every shard) both isolate the data path."""
+            clear_footer_cache()
+            t0 = time.perf_counter()
+            with dataset(d) as ds:
+                tbl = build(ds).to_table(io_depth=io_depth)
+                st = ds.stats
+            dt = time.perf_counter() - t0
+            return tbl, st, st.preads - 2 * n_shards, dt
+
+        # --- wide projection (every column, every row) ----------------------
+        def wide(ds):
+            return ds.select(cols)
+
+        s_tbl, s_st, s_preads, s_dt = measure(wide, 1)
+        p_tbl, p_st, p_preads, p_dt = measure(wide, IO_DEPTH)
+        for c in cols:
+            assert s_tbl[c].tobytes() == p_tbl[c].tobytes(), \
+                f"pipelined wide projection differs from serial in {c!r}"
+        assert p_preads * 2 <= s_preads, \
+            f"pipelined must issue >=2x fewer data preads " \
+            f"({s_preads} serial vs {p_preads} pipelined)"
+        report("io/wide_preads_serial_vs_pipelined",
+               s_preads / max(p_preads, 1),
+               f"{s_preads} -> {p_preads} data preads at io_depth={IO_DEPTH} "
+               f"({n_shards} shards x {groups_per_shard} groups, "
+               f"{len(cols)} cols), wall {s_dt * 1e3:.1f}ms -> "
+               f"{p_dt * 1e3:.1f}ms ({s_dt / max(p_dt, 1e-9):.2f}x)",
+               preads=p_st.preads, bytes_read=p_st.bytes_read)
+        report("io/wide_wall_clock_vs_serial", s_dt / max(p_dt, 1e-9),
+               f"byte-identical output, {p_st.coalesced_preads} page reads "
+               f"coalesced, {p_st.wasted_bytes}B hole bytes",
+               preads=p_st.preads, bytes_read=p_st.bytes_read)
+
+        # --- selective point probe (clustered ids -> zone-map pruning) ------
+        victim = rows_per_shard + rows_per_group // 2
+
+        def probe(ds):
+            return ds.where(C("id") == victim).select(cols)
+
+        ps_tbl, ps_st, _, ps_dt = measure(probe, 1)
+        pp_tbl, pp_st, _, pp_dt = measure(probe, IO_DEPTH)
+        for c in cols:
+            assert ps_tbl[c].tobytes() == pp_tbl[c].tobytes(), \
+                f"pipelined probe differs from serial in {c!r}"
+        # the probe prunes to one shard, so raw preads (equal footer cost on
+        # a cold cache) are the honest comparison here
+        assert pp_st.preads <= ps_st.preads, \
+            "pipelined probe must not issue more preads than serial"
+        report("io/probe_preads_serial_vs_pipelined",
+               ps_st.preads / max(pp_st.preads, 1),
+               f"point probe: {ps_st.preads} -> {pp_st.preads} preads, "
+               f"wall {ps_dt * 1e3:.2f}ms -> {pp_dt * 1e3:.2f}ms",
+               preads=pp_st.preads, bytes_read=pp_st.bytes_read,
+               pruned_bytes=pp_st.bytes_pruned,
+               pages_pruned=pp_st.pages_pruned)
+
+        # --- footer cache: repeated opens of unchanged shards ---------------
+        # the unpruned scan opens every shard, so a cold open charges exactly
+        # 2 footer preads per shard and a warm one must charge none
+        clear_footer_cache()
+        t0 = time.perf_counter()
+        with dataset(d) as ds:
+            ds.select(["id"]).to_table()
+            cold = ds.stats
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with dataset(d) as ds:
+            ds.select(["id"]).to_table()
+            warm = ds.stats
+        t_warm = time.perf_counter() - t0
+        assert warm.footer_cache_hits == n_shards
+        assert warm.footer_bytes == 0 and \
+            warm.preads == cold.preads - 2 * n_shards, \
+            "a warm open must issue zero footer preads"
+        report("io/footer_cache_reopen_speedup", t_cold / max(t_warm, 1e-9),
+               f"reopen: {cold.preads} -> {warm.preads} preads "
+               f"({n_shards} footer parses cached), "
+               f"{t_cold * 1e3:.2f}ms -> {t_warm * 1e3:.2f}ms",
+               preads=warm.preads, bytes_read=warm.bytes_read,
+               footer_cache_hits=warm.footer_cache_hits)

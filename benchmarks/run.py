@@ -1,15 +1,20 @@
 # One function per paper table/figure. Prints
-# ``name,us_per_call,pruned_bytes,pages_pruned,derived`` CSV; ``pruned_bytes``
-# is the plan-proven avoided I/O (IOStats.bytes_pruned) and ``pages_pruned``
-# the page reads those proofs skipped (IOStats.pages_pruned — group- plus
-# page-granular zone maps), so pruning regressions at either granularity show
-# up in the perf trajectory; both blank for suites where pruning doesn't
-# apply.
+# ``name,us_per_call,pruned_bytes,pages_pruned,preads,bytes_read,
+# footer_cache_hits,derived`` CSV; ``pruned_bytes`` is the plan-proven
+# avoided I/O (IOStats.bytes_pruned) and ``pages_pruned`` the page reads
+# those proofs skipped (IOStats.pages_pruned — group- plus page-granular
+# zone maps), so pruning regressions at either granularity show up in the
+# perf trajectory. ``preads``/``bytes_read`` track the I/O a probe actually
+# issued (the pipelined scheduler's coalescing win) and
+# ``footer_cache_hits`` the shard opens served without a metadata pread;
+# all blank for suites where they don't apply.
 #
 # ``--only scan,compact`` restricts to matching suites (substring match on
-# the label or module name); ``BULLION_BENCH_SMOKE=1`` makes the suites that
-# honor it (scan, compact) shrink their datasets — the CI smoke mode that
-# keeps the perf-trajectory CSV accumulating on every push.
+# the label or module name — select the I/O suite with ``--only bench_io``;
+# the bare key "io" also matches deletion/quantization/projection);
+# ``BULLION_BENCH_SMOKE=1`` makes the suites that honor it (scan, compact,
+# bench_io) shrink their datasets — the CI smoke mode that keeps the
+# perf-trajectory CSV accumulating on every push.
 from __future__ import annotations
 
 import argparse
@@ -19,7 +24,7 @@ import traceback
 
 
 def main(argv=None) -> None:
-    from . import (bench_cascade, bench_compact, bench_deletion,
+    from . import (bench_cascade, bench_compact, bench_deletion, bench_io,
                    bench_metadata, bench_multimodal, bench_projection,
                    bench_quantization, bench_roofline, bench_scan,
                    bench_sparse_delta)
@@ -30,16 +35,18 @@ def main(argv=None) -> None:
                          "label or module matches (e.g. --only scan,compact)")
     args = ap.parse_args(argv)
 
-    rows: list[tuple[str, float, str, str, str]] = []
-
     def report(name: str, value: float, derived: str = "",
-               pruned_bytes=None, pages_pruned=None) -> None:
-        pruned = "" if pruned_bytes is None else str(int(pruned_bytes))
-        pages = "" if pages_pruned is None else str(int(pages_pruned))
-        rows.append((name, float(value), pruned, pages, derived))
-        print(f"{name},{value:.6g},{pruned},{pages},{derived}", flush=True)
+               pruned_bytes=None, pages_pruned=None, preads=None,
+               bytes_read=None, footer_cache_hits=None) -> None:
+        def cell(v):
+            return "" if v is None else str(int(v))
+        pruned, pages = cell(pruned_bytes), cell(pages_pruned)
+        pr, br, fch = cell(preads), cell(bytes_read), cell(footer_cache_hits)
+        print(f"{name},{value:.6g},{pruned},{pages},{pr},{br},{fch},"
+              f"{derived}", flush=True)
 
-    print("name,us_per_call,pruned_bytes,pages_pruned,derived")
+    print("name,us_per_call,pruned_bytes,pages_pruned,preads,bytes_read,"
+          "footer_cache_hits,derived")
     suites = [
         ("metadata  (Fig. 5)", bench_metadata),
         ("deletion  (§2.1)", bench_deletion),
@@ -50,6 +57,7 @@ def main(argv=None) -> None:
         ("projection (§2.3, Table 1)", bench_projection),
         ("scan      (zone maps / pushdown)", bench_scan),
         ("compact   (write_to sink / recluster)", bench_compact),
+        ("io        (pipelined scheduler / footer cache)", bench_io),
         ("roofline  (dry-run artifacts)", bench_roofline),
     ]
     if args.only:

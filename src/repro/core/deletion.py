@@ -28,7 +28,8 @@ from enum import IntEnum
 import numpy as np
 
 from . import pages as pages_mod
-from .footer import MAGIC, FooterBuilder, FooterView, PageType, Sec, read_footer
+from .footer import (MAGIC, FooterBuilder, FooterView, PageType, Sec,
+                     notify_footer_rewrite, read_footer)
 from .merkle import MerkleTree, page_hash
 
 COMPACTED = 0x80  # PAGE_FLAGS high bit
@@ -223,6 +224,10 @@ def delete_rows(path: str, global_rows: np.ndarray,
         f.write(struct.pack("<Q", len(new_footer)) + MAGIC)
         f.truncate()
         stats.bytes_rewritten += len(new_footer) + 16
+
+    # the in-place rewrite changed the footer: drop any cached copy even if
+    # filesystem timestamps are too coarse to show it
+    notify_footer_rewrite(path)
 
     stats.hash_ops_incremental = tree.hash_ops - baseline_ops
     stats.hash_ops_monolithic = n_pages + fv.n_groups + 1

@@ -252,6 +252,30 @@ class FooterView:
                 for i in range(0, len(parts) - 1, 2)}
 
 
+# -- metadata-cache invalidation hooks ---------------------------------------
+#
+# Higher layers may cache parsed footers keyed by path (the dataset layer's
+# process-wide footer cache). Core-layer rewriters (``BullionWriter.close``,
+# ``deletion.delete_rows``) must be able to invalidate those caches without
+# importing upward, so cache owners register a callback here; with no cache
+# ever imported the list stays empty and notification is a no-op.
+
+_footer_invalidators: list = []
+
+
+def register_footer_invalidator(fn) -> None:
+    """Register ``fn(path)`` to be called whenever a Bullion file at
+    ``path`` is rewritten in-process."""
+    if fn not in _footer_invalidators:
+        _footer_invalidators.append(fn)
+
+
+def notify_footer_rewrite(path: str) -> None:
+    """Tell every registered metadata cache that ``path`` was rewritten."""
+    for fn in _footer_invalidators:
+        fn(path)
+
+
 def read_footer(path: str) -> tuple[FooterView, int]:
     """Read footer with two preads (tail, then footer) — the paper's access
     pattern. Returns (view, footer_offset)."""

@@ -30,6 +30,25 @@ from .quantization import QuantSpec
 COALESCE_GAP = 64 * 1024  # merge preads when the hole is smaller than this
 
 
+def default_coalesce_gap() -> int:
+    """Coalescing gap in bytes: ``BULLION_COALESCE_GAP`` overrides the
+    built-in 64 KiB default fleet-wide. 0 still merges physically
+    contiguous ranges (two preads for one contiguous span is never right)
+    but bridges no holes, so ``wasted_bytes`` stays 0."""
+    env = os.environ.get("BULLION_COALESCE_GAP")
+    if env is None or not env.strip():
+        return COALESCE_GAP
+    try:
+        gap = int(env)
+    except ValueError:
+        raise ValueError(
+            f"BULLION_COALESCE_GAP must be an integer byte count, "
+            f"got {env!r}") from None
+    if gap < 0:
+        raise ValueError(f"BULLION_COALESCE_GAP must be >= 0, got {gap}")
+    return gap
+
+
 @dataclass
 class IOStats:
     preads: int = 0
@@ -40,10 +59,17 @@ class IOStats:
                               # (zone maps, row location, head limits)
     pages_pruned: int = 0     # page reads those proofs avoided (group- and
                               # page-granular zone maps)
+    coalesced_preads: int = 0  # page reads merged into a larger neighbor
+                               # (= preads avoided by range coalescing)
+    wasted_bytes: int = 0     # hole bytes read only because coalescing
+                              # bridged a gap between two wanted ranges
+    footer_cache_hits: int = 0  # shard opens served from the process-wide
+                                # footer cache (no footer pread, no parse)
 
 
 class BullionReader:
-    def __init__(self, path: str, *, footer=None):
+    def __init__(self, path: str, *, footer=None, charge_footer: bool = True,
+                 coalesce_gap: Optional[int] = None):
         self.path = path
         t0 = time.perf_counter()
         if footer is None:
@@ -52,8 +78,18 @@ class BullionReader:
             # pre-parsed (FooterView, offset) from dataset discovery — the
             # metadata was read exactly once, by the DataSource
             self.footer, self.footer_offset = footer
+        if coalesce_gap is None:
+            self.coalesce_gap = default_coalesce_gap()
+        else:
+            self.coalesce_gap = int(coalesce_gap)
+            if self.coalesce_gap < 0:
+                raise ValueError(
+                    f"coalesce_gap must be >= 0, got {coalesce_gap}")
+        # ``charge_footer=False`` means the footer preads happened elsewhere
+        # (or not at all: a footer-cache hit) and must not be double-counted
         self.stats = IOStats(preads=2, footer_bytes=len(self.footer._buf),
-                             bytes_read=len(self.footer._buf))
+                             bytes_read=len(self.footer._buf)) \
+            if charge_footer else IOStats()
         self.stats.metadata_seconds = time.perf_counter() - t0
         self._f = open(path, "rb")
         self._scanner = None
@@ -117,8 +153,21 @@ class BullionReader:
             self.stats.bytes_read += size
         return data
 
+    def _pread_run(self, off: int, end: int,
+                   extents: Sequence[tuple[int, int, int]]) -> dict[int, bytes]:
+        """One positional read covering ``[off, end)``, sliced back into the
+        page extents ``(page_off, size, page_id)`` it coalesced. Accounts the
+        preads the merge avoided and the hole bytes it read to bridge gaps."""
+        buf = self._pread(off, end - off)
+        covered = sum(s for _, s, _ in extents)
+        with self._stats_lock:
+            self.stats.coalesced_preads += len(extents) - 1
+            self.stats.wasted_bytes += (end - off) - covered
+        return {p: buf[o - off: o - off + s] for o, s, p in extents}
+
     def _read_pages(self, page_ids: Sequence[int]) -> dict[int, bytes]:
-        """Coalesced ranged reads for a set of pages."""
+        """Coalesced ranged reads for a set of pages (gap-bridged merging up
+        to ``self.coalesce_gap`` hole bytes between wanted ranges)."""
         fv = self.footer
         extents = sorted((fv.page_extent(p), p) for p in page_ids)
         out: dict[int, bytes] = {}
@@ -129,14 +178,12 @@ class BullionReader:
             end = off + size
             while j < len(extents):
                 (o2, s2), _ = extents[j]
-                if o2 - end > COALESCE_GAP:
+                if o2 - end > self.coalesce_gap:
                     break
                 end = max(end, o2 + s2)
                 j += 1
-            buf = self._pread(off, end - off)
-            for k in range(i, j):
-                (o, s), p = extents[k]
-                out[p] = buf[o - off: o - off + s]
+            out.update(self._pread_run(
+                off, end, [(o, s, p) for (o, s), p in extents[i:j]]))
             i = j
         return out
 

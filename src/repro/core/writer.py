@@ -49,7 +49,8 @@ from . import pages
 from .encodings import EncodeContext
 from .encodings.base import dtype_code
 from .footer import (ColKind, FooterBuilder, FORMAT_V0, FORMAT_V2,
-                     FORMAT_VERSION, MAGIC, PageType, Sec, name_hash)
+                     FORMAT_VERSION, MAGIC, PageType, Sec, name_hash,
+                     notify_footer_rewrite)
 from .merkle import MerkleTree, page_hash
 from .quantization import (QUANT_DTYPE, QuantMode, QuantSpec, dequantize,
                            quantize, storage_dtype)
@@ -414,6 +415,9 @@ class BullionWriter:
         f.write(struct.pack("<Q", len(footer)) + MAGIC)
         f.close()
         self._f = None
+        # a (re)write at this path obsoletes any cached footer even when
+        # filesystem timestamps are too coarse to show it
+        notify_footer_rewrite(self.path)
 
         self._result = {"rows": n_rows, "groups": n_groups, "pages": n_pages,
                         "file_checksum": tree.root}

@@ -11,8 +11,10 @@ reads disjoint files, so distributed training never contends on a handle or
 an OS page-cache line — and by row group otherwise (single-file datasets, or
 fewer shards than ranks). Either way ranks see disjoint, contiguous ranges;
 the quality-presorted layout keeps each rank's reads sequential. Host decode
-overlaps device compute via a prefetch thread, and the cursor (epoch, group
-index) is checkpointable for exactly-once resume.
+overlaps device compute via a prefetch thread, ``prefetch=`` additionally
+drives the pipelined I/O scheduler (``dataset.io``) so the next groups'
+coalesced preads overlap the current group's decode, and the cursor (epoch,
+group index) is checkpointable for exactly-once resume.
 """
 
 from __future__ import annotations
@@ -44,6 +46,9 @@ class BullionLoader:
         self.seq_len = seq_len
         self.rank, self.world = rank, world
         self.column = column
+        # batches-ahead bound for the consumer queue AND the read-ahead
+        # depth of the I/O scheduler (prefetch > 1 pipelines preads)
+        self.prefetch = max(1, int(prefetch))
         self.state = state or LoaderState()
         self.dataset = dataset(path).select([column])
         if predicate is not None:
@@ -74,7 +79,7 @@ class BullionLoader:
         self._stripe_shards = world > 1 and len(live) >= world
         self._tokens_per_batch = batch_size * (seq_len + 1)
         self._buf = np.zeros(0, np.int32)
-        self._queue: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._queue: queue.Queue = queue.Queue(maxsize=self.prefetch)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
 
@@ -86,9 +91,27 @@ class BullionLoader:
         return [g for i, g in enumerate(self._groups)
                 if i % self.world == self.rank]
 
-    def _read_group(self, g: int) -> np.ndarray:
+    def _make_scheduler(self, groups: list[int]):
+        """Pipelined I/O over this rank's remaining groups for one epoch
+        pass: the scheduler stages the next ``prefetch`` groups' coalesced
+        preads while the current group decodes. None = serial reads."""
+        if self.prefetch <= 1 or len(groups) <= 1:
+            return None
+        from ..dataset.io import IOScheduler
+        opt = self.dataset.plan()
+        cols = opt.prefetch_columns()
+        if not cols:
+            return None
+        sched = IOScheduler(self.dataset._source,
+                            [self._tasks[g] for g in groups],
+                            columns=cols, io_depth=self.prefetch)
+        sched.start()
+        return sched
+
+    def _read_group(self, g: int, reader=None) -> np.ndarray:
         task = self._tasks[g]
-        tbl = self.dataset.read_group(task.group, shard=task.shard)
+        tbl = self.dataset.read_group(task.group, shard=task.shard,
+                                      reader=reader)
         docs = tbl[self.column] if tbl is not None else []
         if len(docs) == 0:
             return np.zeros(0, np.int32)
@@ -110,19 +133,28 @@ class BullionLoader:
     def _produce(self):
         try:
             while not self._stop.is_set():
-                mine = self._my_groups(self.state.epoch)
-                for g in mine:
-                    if g < self.state.group:
-                        continue  # resume skips already-consumed groups
-                    self._buf = np.concatenate([self._buf, self._read_group(g)])
-                    while len(self._buf) >= self._tokens_per_batch:
-                        batch = self._buf[:self._tokens_per_batch] \
-                            .reshape(self.batch_size, self.seq_len + 1)
-                        self._buf = self._buf[self._tokens_per_batch:]
-                        cursor = LoaderState(self.state.epoch, g + 1)
-                        if not self._put((batch.copy(), cursor)):
-                            return
-                    self.state.group = g + 1
+                # resume skips already-consumed groups; the scheduler is
+                # built over exactly the remaining ones, in read order
+                mine = [g for g in self._my_groups(self.state.epoch)
+                        if g >= self.state.group]
+                sched = self._make_scheduler(mine)
+                try:
+                    for i, g in enumerate(mine):
+                        reader = sched.reader_for(i) if sched is not None \
+                            else None
+                        self._buf = np.concatenate(
+                            [self._buf, self._read_group(g, reader)])
+                        while len(self._buf) >= self._tokens_per_batch:
+                            batch = self._buf[:self._tokens_per_batch] \
+                                .reshape(self.batch_size, self.seq_len + 1)
+                            self._buf = self._buf[self._tokens_per_batch:]
+                            cursor = LoaderState(self.state.epoch, g + 1)
+                            if not self._put((batch.copy(), cursor)):
+                                return
+                        self.state.group = g + 1
+                finally:
+                    if sched is not None:
+                        sched.close()
                 self.state.epoch += 1
                 self.state.group = 0
         except Exception as e:  # surface in consumer

@@ -43,6 +43,10 @@ Layout:
   executor.py  — ``decode_group``/``execute_group``: the one read pipeline,
                  plus ``run_tasks`` (bounded thread pool, deterministic order)
                  shared by parallel reads and the sink
+  io.py        — ``IOScheduler``/``PrefetchReader``: plan-wide byte-range
+                 scheduling (``io_depth=`` on every terminal) — cross-task
+                 pread coalescing and a prefetch thread that overlaps the
+                 next tasks' reads with the current decode
   sink.py      — ``write_dataset``/``WriteResult``: the plan-driven
                  materialization sink behind ``Dataset.write_to`` (compaction
                  / compliance purge, resharding, reclustering, re-encoding)
@@ -51,15 +55,19 @@ Layout:
 
 from .core import Dataset, DatasetBatch, dataset
 from .executor import GroupResult, decode_group, execute_group, run_tasks
+from .io import IOScheduler, PrefetchReader
 from .plan import (LogicalPlan, OptimizedPlan, PhysicalPlan, ScanTask, lower,
                    optimize, split_conjuncts)
 from .sink import WriteResult, write_dataset
-from .source import DataSource, SchemaMismatchError, discover
+from .source import (DataSource, SchemaMismatchError, cached_footer,
+                     clear_footer_cache, discover, invalidate_cached_footer)
 
 __all__ = [
     "Dataset", "DatasetBatch", "dataset", "DataSource",
     "SchemaMismatchError", "discover",
     "GroupResult", "decode_group", "execute_group", "run_tasks",
+    "IOScheduler", "PrefetchReader",
     "LogicalPlan", "OptimizedPlan", "PhysicalPlan", "ScanTask", "lower",
     "optimize", "split_conjuncts", "WriteResult", "write_dataset",
+    "cached_footer", "clear_footer_cache", "invalidate_cached_footer",
 ]

@@ -24,11 +24,16 @@ from .plan import LogicalPlan, OptimizedPlan, PhysicalPlan, ScanTask, \
 from .source import DataSource, PathSpec
 
 
-def dataset(path_or_paths: PathSpec) -> "Dataset":
+def dataset(path_or_paths: PathSpec, *,
+            coalesce_gap: Optional[int] = None) -> "Dataset":
     """Open a lazy Dataset over one Bullion file, a shard directory, a glob
-    pattern, or an explicit list of shard paths."""
+    pattern, or an explicit list of shard paths. Shard footers come from the
+    process-wide footer cache (repeated opens of unchanged files parse
+    nothing). ``coalesce_gap`` overrides the readers' pread-coalescing hole
+    budget in bytes (default: ``BULLION_COALESCE_GAP`` or 64 KiB)."""
     from .source import discover
-    return Dataset(DataSource(discover(path_or_paths)))
+    return Dataset(DataSource(discover(path_or_paths),
+                              coalesce_gap=coalesce_gap))
 
 
 @dataclass
@@ -188,14 +193,16 @@ class Dataset:
             self._source.credit_pruned(phys.bytes_pruned, phys.pages_pruned)
 
     def _execute(self, output_columns: Optional[Sequence[str]] = None,
-                 parallelism: int = 1
+                 parallelism: int = 1, io_depth: int = 1
                  ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
         """Run the plan; ``output_columns`` overrides materialization for
         data-free terminals (row_ids/count) without spawning a new instance
         (caches and the pruned-bytes credit stay shared). ``parallelism > 1``
         decodes independent (shard, group) tasks on a bounded thread pool;
-        results stream in task order, so the output is identical to a serial
-        run."""
+        ``io_depth > 1`` prefetches upcoming tasks' coalesced byte ranges on
+        the I/O scheduler so preads overlap decode (``io_depth=1`` is the
+        serial per-group read path). Results stream in task order either
+        way, so the output is identical to a serial run."""
         opt = self.plan()
         phys = self.physical_plan()
         self._credit(phys)
@@ -204,18 +211,31 @@ class Dataset:
             else tuple(output_columns)
         filtered = p.predicate is not None or p.row_ids is not None
 
-        def run(task: ScanTask) -> Optional[executor.GroupResult]:
+        if io_depth < 1:
+            raise ValueError(f"io_depth must be >= 1, got {io_depth}")
+        emitted, limit = 0, p.limit
+        if limit is not None and limit <= 0:
+            return
+        sched = None
+        prefetch_cols = opt.prefetch_columns(cols)
+        if io_depth > 1 and len(phys.tasks) > 1 and prefetch_cols:
+            from .io import IOScheduler
+            sched = IOScheduler(self._source, phys.tasks,
+                                columns=prefetch_cols, io_depth=io_depth)
+
+        def run(item) -> Optional[executor.GroupResult]:
+            i, task = item
+            reader = sched.reader_for(i) if sched is not None \
+                else self._source.reader(task.shard)
             return executor.execute_group(
-                self._source.reader(task.shard), task.group,
+                reader, task.group,
                 columns=cols, predicate=p.predicate,
                 rows=task.rows, drop_deleted=p.drop_deleted,
                 dequant=p.dequantize, use_kernel=p.use_kernel,
                 pages=task.pages)
 
-        emitted, limit = 0, p.limit
-        if limit is not None and limit <= 0:
-            return
-        for task, res in executor.run_tasks(phys.tasks, run, parallelism):
+        for (_, task), res in executor.run_tasks(
+                list(enumerate(phys.tasks)), run, parallelism, io=sched):
             if res is None or (filtered and not len(res.row_ids)):
                 continue
             if limit is not None and emitted + len(res.row_ids) > limit:
@@ -234,12 +254,14 @@ class Dataset:
                                 for t in self.physical_plan().tasks}
         return self._task_pages.get((shard, group))
 
-    def read_group(self, group: int, shard: int = 0) -> Optional[dict]:
+    def read_group(self, group: int, shard: int = 0, *,
+                   reader=None) -> Optional[dict]:
         """Execute the plan over one row group (loader-style streaming).
         Returns the table dict, or None when no row survives. Honors the
         plan's predicate, ``with_rows`` pinning, and page-granular pruning;
         ``head`` limits don't apply (per-group streaming has no cross-group
-        cursor)."""
+        cursor). ``reader`` overrides the shard reader — the training
+        loader passes a ``PrefetchReader`` staged by its I/O scheduler."""
         from .plan import locate_rows
         opt = self.plan()
         p = opt.logical
@@ -253,20 +275,24 @@ class Dataset:
             if rows is None:
                 return None
         res = executor.execute_group(
-            self._source.reader(shard), group, columns=opt.output_columns,
+            self._source.reader(shard) if reader is None else reader,
+            group, columns=opt.output_columns,
             predicate=p.predicate, rows=rows, drop_deleted=p.drop_deleted,
             dequant=p.dequantize, use_kernel=p.use_kernel,
             pages=self._page_sel(shard, group))
         return None if res is None else res.table
 
     # -- terminals --------------------------------------------------------------
-    def scan_batches(self, *, parallelism: int = 1) -> Iterator[DatasetBatch]:
+    def scan_batches(self, *, parallelism: int = 1,
+                     io_depth: int = 1) -> Iterator[DatasetBatch]:
         """Stream per-group results *with* their global row ids — the
         single-pass terminal when a caller needs both the data and the row
         identity (one scan, one pruned-bytes credit). ``parallelism > 1``
-        decodes groups on a thread pool; the stream order is unchanged."""
+        decodes groups on a thread pool; ``io_depth > 1`` overlaps upcoming
+        groups' preads with decode; the stream order is unchanged."""
         bounds: dict[int, np.ndarray] = {}
-        for task, res in self._execute(parallelism=parallelism):
+        for task, res in self._execute(parallelism=parallelism,
+                                       io_depth=io_depth):
             if task.shard not in bounds:
                 bounds[task.shard] = \
                     _group_bounds(self._source.footer(task.shard))
@@ -276,13 +302,14 @@ class Dataset:
                                row_ids=offset + res.row_ids, table=res.table)
 
     def to_batches(self, batch_size: Optional[int] = None, *,
-                   parallelism: int = 1) -> Iterator[dict]:
+                   parallelism: int = 1, io_depth: int = 1) -> Iterator[dict]:
         """Stream result tables. ``batch_size=None`` yields one table per
         surviving row group (natural batches); an integer re-slices the
         stream into tables of exactly ``batch_size`` rows (last may be
         short)."""
         if batch_size is None:
-            for _, res in self._execute(parallelism=parallelism):
+            for _, res in self._execute(parallelism=parallelism,
+                                        io_depth=io_depth):
                 yield res.table
             return
         if batch_size <= 0:
@@ -290,7 +317,8 @@ class Dataset:
         cols = self.plan().output_columns
         buf: list[dict] = []
         buffered = 0
-        for _, res in self._execute(parallelism=parallelism):
+        for _, res in self._execute(parallelism=parallelism,
+                                    io_depth=io_depth):
             buf.append(res.table)
             buffered += len(res.row_ids)
             while buffered >= batch_size:
@@ -301,20 +329,23 @@ class Dataset:
         if buffered:
             yield _concat_tables(buf, cols)
 
-    def to_table(self, *, parallelism: int = 1) -> dict:
+    def to_table(self, *, parallelism: int = 1, io_depth: int = 1) -> dict:
         """Materialize the whole result as one column dict."""
         cols = self.plan().output_columns
         return _concat_tables(
-            [res.table for _, res in self._execute(parallelism=parallelism)],
+            [res.table for _, res in self._execute(parallelism=parallelism,
+                                                   io_depth=io_depth)],
             cols, empty=self._empty_column)
 
-    def row_ids(self, *, parallelism: int = 1) -> np.ndarray:
+    def row_ids(self, *, parallelism: int = 1,
+                io_depth: int = 1) -> np.ndarray:
         """Global row ids (raw row space) of every surviving row. Reads only
         the predicate columns (use ``scan_batches`` for ids + data in one
         pass)."""
         parts, bounds = [], {}
         for task, res in self._execute(output_columns=(),
-                                       parallelism=parallelism):
+                                       parallelism=parallelism,
+                                       io_depth=io_depth):
             if task.shard not in bounds:
                 bounds[task.shard] = \
                     _group_bounds(self._source.footer(task.shard))
@@ -323,7 +354,7 @@ class Dataset:
         return np.concatenate(parts).astype(np.int64) if parts \
             else np.zeros(0, np.int64)
 
-    def count_rows(self, *, parallelism: int = 1) -> int:
+    def count_rows(self, *, parallelism: int = 1, io_depth: int = 1) -> int:
         """Number of surviving rows. Without a predicate or pinned rows this
         is answered from footers alone — zero data preads."""
         p = self._plan
@@ -340,14 +371,16 @@ class Dataset:
             return total if p.limit is None else min(total, p.limit)
         return sum(len(res.row_ids)
                    for _, res in self._execute(output_columns=(),
-                                               parallelism=parallelism))
+                                               parallelism=parallelism,
+                                               io_depth=io_depth))
 
     # -- write path (materialization sink) ---------------------------------------
     def write_to(self, out_dir: str, *, shard_rows: Optional[int] = None,
                  rows_per_group: Optional[int] = None,
                  page_rows: Optional[int] = None, sort_by=None,
                  compliance: Optional[int] = None, parallelism: int = 1,
-                 collect_stats: bool = True, use_advisor: bool = True):
+                 io_depth: int = 1, collect_stats: bool = True,
+                 use_advisor: bool = True):
         """Materialize this plan into a fresh sharded dataset (current
         format: v2 page-indexed shards) under ``out_dir`` (the read/write
         loop's write half — see ``repro.dataset.sink``).
@@ -363,14 +396,15 @@ class Dataset:
         the sort column become selective; ``page_rows`` sets the output page
         budget (default: the input's recorded budget), with each page
         re-encoded from its own statistics; ``parallelism`` decodes input
-        groups on a thread pool with deterministic output. Returns a
-        ``WriteResult``."""
+        groups on a thread pool with deterministic output, and
+        ``io_depth > 1`` pipelines the read side's preads against decode
+        (the write half is unaffected). Returns a ``WriteResult``."""
         from .sink import write_dataset
         return write_dataset(self, out_dir, shard_rows=shard_rows,
                              rows_per_group=rows_per_group,
                              page_rows=page_rows, sort_by=sort_by,
                              compliance=compliance, parallelism=parallelism,
-                             collect_stats=collect_stats,
+                             io_depth=io_depth, collect_stats=collect_stats,
                              use_advisor=use_advisor)
 
     def delete_where(self, predicate: Predicate, level=None):

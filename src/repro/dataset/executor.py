@@ -286,7 +286,7 @@ def execute_group(reader: "BullionReader", group: int, *,
 # ---------------------------------------------------------------------------
 
 
-def run_tasks(tasks, fn, parallelism: int = 1):
+def run_tasks(tasks, fn, parallelism: int = 1, io=None):
     """Execute ``fn(task)`` for every task, yielding ``(task, result)``
     strictly in task order.
 
@@ -296,38 +296,51 @@ def run_tasks(tasks, fn, parallelism: int = 1):
     most ``2 * parallelism`` deep), so a consumer that stops early — a
     ``head`` limit, an aborted iteration — never waits on more than the
     window. Per-(shard, row-group) tasks are independent and readers use
-    positional I/O, so ordering the *yields* is all determinism needs:
-    parallel and serial runs produce identical streams.
+    positional I/O on one shared fd per shard, so ordering the *yields* is
+    all determinism needs: parallel and serial runs produce identical
+    streams.
+
+    ``io`` is an optional pipelined I/O scheduler (``dataset.io
+    .IOScheduler``) whose lifecycle this loop owns: started before the first
+    task runs, closed when iteration finishes *or* is abandoned early, so
+    its prefetch thread never outlives the scan. ``fn`` decides whether to
+    pull its reader from the scheduler.
     """
     tasks = list(tasks)
-    if parallelism <= 1 or len(tasks) <= 1:
-        for t in tasks:
-            yield t, fn(t)
-        return
-    from collections import deque
-    from concurrent.futures import ThreadPoolExecutor
-
-    ex = ThreadPoolExecutor(max_workers=parallelism,
-                            thread_name_prefix="bullion-scan")
-    pending: deque = deque()
-    it = iter(tasks)
+    if io is not None:
+        io.start()
     try:
-        def fill() -> None:
-            while len(pending) < 2 * parallelism:
-                t = next(it, None)
-                if t is None:
-                    return
-                pending.append((t, ex.submit(fn, t)))
+        if parallelism <= 1 or len(tasks) <= 1:
+            for t in tasks:
+                yield t, fn(t)
+            return
+        from collections import deque
+        from concurrent.futures import ThreadPoolExecutor
 
-        fill()
-        while pending:
-            t, fut = pending.popleft()
-            yield t, fut.result()
+        ex = ThreadPoolExecutor(max_workers=parallelism,
+                                thread_name_prefix="bullion-scan")
+        pending: deque = deque()
+        it = iter(tasks)
+        try:
+            def fill() -> None:
+                while len(pending) < 2 * parallelism:
+                    t = next(it, None)
+                    if t is None:
+                        return
+                    pending.append((t, ex.submit(fn, t)))
+
             fill()
+            while pending:
+                t, fut = pending.popleft()
+                yield t, fut.result()
+                fill()
+        finally:
+            for _, fut in pending:
+                fut.cancel()
+            ex.shutdown(wait=True)
     finally:
-        for _, fut in pending:
-            fut.cancel()
-        ex.shutdown(wait=True)
+        if io is not None:
+            io.close()
 
 
 def truncate_result(res: GroupResult, n: int) -> GroupResult:

@@ -51,6 +51,18 @@ class OptimizedPlan:
     read_columns: tuple[str, ...]     # projection narrowing: output ∪ predicate
     conjuncts: tuple[Predicate, ...]  # top-level AND split (empty = no pred)
 
+    def prefetch_columns(self, output_columns: Optional[Sequence[str]] = None
+                         ) -> tuple[str, ...]:
+        """Columns whose pages the I/O scheduler may stage eagerly for every
+        task. With a predicate, only the predicate columns are uncondi-
+        tionally read — payload pages are fetched on demand so groups the
+        filter empties still skip them (the serial path's second I/O win).
+        Without one, every read column's pages are certain to be decoded."""
+        if self.logical.predicate is not None:
+            return self.pred_columns
+        return self.output_columns if output_columns is None \
+            else tuple(output_columns)
+
 
 class ColumnNotFoundError(KeyError):
     """A plan references a column absent from the dataset schema. Raised at

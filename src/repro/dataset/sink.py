@@ -21,7 +21,9 @@ format (v2: multi-page chunks with a page index and zone maps):
 Unsorted rewrites stream group-by-group (the writer's ``stream=True`` mode
 holds at most one group per shard in memory); a ``sort_by`` rewrite must
 materialize the surviving rows once to permute them globally. Input groups
-decode on the shared bounded thread pool when ``parallelism > 1``, with
+decode on the shared bounded thread pool when ``parallelism > 1``, and
+``io_depth > 1`` pipelines the read side through the I/O scheduler (the
+next input group's preads overlap the current group's decode+encode) — with
 deterministic output either way.
 """
 
@@ -128,6 +130,7 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
                   sort_by: Optional[SortBy] = None,
                   compliance: Optional[int] = None,
                   parallelism: int = 1,
+                  io_depth: int = 1,
                   collect_stats: bool = True,
                   use_advisor: bool = True) -> WriteResult:
     """Execute ``ds``'s plan and materialize the result under ``out_dir``.
@@ -215,14 +218,16 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
             # a global re-cluster needs the whole surviving table at once
             from .core import _concat_tables
             parts = [res.table
-                     for _, res in ds._execute(parallelism=parallelism)]
+                     for _, res in ds._execute(parallelism=parallelism,
+                                               io_depth=io_depth)]
             full = _concat_tables(parts, opt.output_columns)
             if parts and _nrows(full):
                 perm = sort_by(full) if callable(sort_by) else \
                     np.argsort(np.asarray(full[sort_by]), kind="stable")
                 emit(_permute(full, perm))
         else:
-            for _, res in ds._execute(parallelism=parallelism):
+            for _, res in ds._execute(parallelism=parallelism,
+                                      io_depth=io_depth):
                 emit(res.table)
 
         if writer is not None:

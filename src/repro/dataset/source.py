@@ -7,18 +7,28 @@ schema-checked at open time: every shard must agree with shard 0 on column
 names, kinds, and logical dtypes, so one plan executes unchanged over all
 of them. Global row ids are raw per-shard row ids offset by the cumulative
 row counts of the preceding shards (shard order = discovery order).
+
+Footer metadata is served from a process-wide cache (``cached_footer``):
+repeated ``dataset()`` opens, the training loader's per-rank construction,
+and ``write_to``'s read side all share one parsed ``FooterView`` per
+unchanged shard, validated by (mtime, size, inode) and counted in
+``IOStats.footer_cache_hits``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import glob as _glob
 import os
 import threading
+import time
+from collections import OrderedDict
 from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from ..core.footer import MAGIC, FooterView, Sec, read_footer
+from ..core.footer import (MAGIC, FooterView, Sec,
+                           register_footer_invalidator, read_footer)
 from ..core.reader import BullionReader, IOStats
 
 PathSpec = Union[str, Sequence[str]]
@@ -26,6 +36,72 @@ PathSpec = Union[str, Sequence[str]]
 
 class SchemaMismatchError(ValueError):
     """A shard disagrees with the dataset schema (names/kinds/dtypes)."""
+
+
+# ---------------------------------------------------------------------------
+# process-wide footer cache
+# ---------------------------------------------------------------------------
+#
+# Every ``dataset()`` open, loader construction, and ``write_to`` read side
+# used to re-pread and re-parse each shard's footer. Footers are immutable
+# for an unchanged file, so one parse per (path, file version) is enough for
+# the whole process: the cache maps absolute path -> parsed ``FooterView``,
+# validated by (mtime_ns, size, inode) on every lookup so a rewritten shard
+# invalidates itself. In-process rewriters (``BullionWriter.close``,
+# ``deletion.delete_rows``) also drop their entry explicitly, which protects
+# same-size rewrites on filesystems with coarse timestamp granularity.
+
+_FOOTER_CACHE_CAP = 4096
+_footer_cache: "OrderedDict[str, tuple[tuple, FooterView, int]]" = \
+    OrderedDict()
+_footer_cache_lock = threading.Lock()
+
+
+def _footer_validator(path: str) -> tuple:
+    st = os.stat(path)
+    return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+
+def cached_footer(path: str) -> tuple[FooterView, int, bool]:
+    """Parsed footer for ``path``: ``(view, footer_offset, cache_hit)``.
+
+    A hit costs one ``stat`` and zero preads; a miss reads and parses the
+    footer, then caches it keyed by the file's identity+version so every
+    later open of the unchanged file is free. ``FooterView`` is read-only
+    and safe to share across datasets and threads."""
+    key = os.path.abspath(path)
+    val = _footer_validator(path)
+    with _footer_cache_lock:
+        ent = _footer_cache.get(key)
+        if ent is not None and ent[0] == val:
+            _footer_cache.move_to_end(key)
+            return ent[1], ent[2], True
+    fv, off = read_footer(path)
+    # only cache if the file didn't change underneath the read (a torn
+    # racing rewrite must not be pinned under the pre-rewrite validator)
+    if _footer_validator(path) == val:
+        with _footer_cache_lock:
+            _footer_cache[key] = (val, fv, off)
+            _footer_cache.move_to_end(key)
+            while len(_footer_cache) > _FOOTER_CACHE_CAP:
+                _footer_cache.popitem(last=False)
+    return fv, off, False
+
+
+def invalidate_cached_footer(path: str) -> None:
+    """Drop one path's cached footer (called by in-process rewriters)."""
+    with _footer_cache_lock:
+        _footer_cache.pop(os.path.abspath(path), None)
+
+
+def clear_footer_cache() -> None:
+    with _footer_cache_lock:
+        _footer_cache.clear()
+
+
+# core-layer rewriters (BullionWriter.close, deletion.delete_rows) notify
+# through repro.core.footer so core never imports upward into this layer
+register_footer_invalidator(invalidate_cached_footer)
 
 
 def _is_bullion(path: str) -> bool:
@@ -79,23 +155,40 @@ class DataSource:
 
     def __init__(self, paths: Sequence[str], *,
                  readers: Optional[Sequence[BullionReader]] = None,
-                 owns_readers: bool = True):
+                 owns_readers: bool = True,
+                 coalesce_gap: Optional[int] = None):
         self.paths = list(paths)
         self.owns_readers = owns_readers
+        self.coalesce_gap = coalesce_gap   # None = reader default (env var)
         self._readers: list[Optional[BullionReader]] = \
             list(readers) if readers is not None else [None] * len(self.paths)
         self._retired: list[IOStats] = []
         self._open_lock = threading.Lock()   # parallel tasks race reader()
         self._invalid: Optional[str] = None
-        # read every footer now — schema mismatches surface at dataset()
+        # resolve every footer now — schema mismatches surface at dataset()
         # time, not deep inside a scan — but hold no file handles: planning
         # is footer-only, and readers open lazily per shard on first data
-        # access (a 10k-shard dataset must not pin 10k descriptors). The
-        # parsed footers are handed to those readers so metadata is read
-        # exactly once per shard.
-        self._foots: list[tuple[FooterView, int]] = \
-            [(r.footer, r.footer_offset) if r is not None
-             else read_footer(p) for r, p in zip(self._readers, self.paths)]
+        # access (a 10k-shard dataset must not pin 10k descriptors). Footers
+        # come from the process-wide cache, so repeated opens of unchanged
+        # shards re-pread and re-parse nothing; the parsed views are handed
+        # to the lazy readers so metadata is read at most once per shard
+        # version across the whole process.
+        t0 = time.perf_counter()
+        self._foots: list[tuple[FooterView, int]] = []
+        self._foot_hits: list[bool] = []
+        for r, p in zip(self._readers, self.paths):
+            if r is not None:
+                self._foots.append((r.footer, r.footer_offset))
+                self._foot_hits.append(False)
+            else:
+                fv, off, hit = cached_footer(p)
+                self._foots.append((fv, off))
+                self._foot_hits.append(hit)
+        hits = sum(self._foot_hits)
+        if hits:
+            self._retired.append(IOStats(
+                footer_cache_hits=hits,
+                metadata_seconds=time.perf_counter() - t0))
         self._footers = [f for f, _ in self._foots]
         self._sig = _schema_sig(self._footers[0])
         self.column_names: list[str] = list(self._sig[0])
@@ -124,7 +217,10 @@ class DataSource:
 
     def reader(self, shard: int) -> BullionReader:
         """Open (or reuse) the shard's data reader — first data access.
-        Reuses the footer parsed at discovery time (no second parse)."""
+        Reuses the footer parsed at discovery time (no second parse), and is
+        the *only* fd per shard: parallel tasks and the I/O scheduler's
+        prefetch thread all share it via positional reads. A footer-cache
+        hit charges no footer preads (nobody re-read the metadata)."""
         self._check_valid()
         r = self._readers[shard]
         if r is None:
@@ -132,7 +228,9 @@ class DataSource:
                 r = self._readers[shard]
                 if r is None:
                     r = self._readers[shard] = BullionReader(
-                        self.paths[shard], footer=self._foots[shard])
+                        self.paths[shard], footer=self._foots[shard],
+                        charge_footer=not self._foot_hits[shard],
+                        coalesce_gap=self.coalesce_gap)
         return r
 
     def footer(self, shard: int) -> FooterView:
@@ -193,10 +291,7 @@ class DataSource:
         total = IOStats()
         for st in (*self._retired,
                    *(r.stats for r in self._readers if r is not None)):
-            total.preads += st.preads
-            total.bytes_read += st.bytes_read
-            total.footer_bytes += st.footer_bytes
-            total.metadata_seconds += st.metadata_seconds
-            total.bytes_pruned += st.bytes_pruned
-            total.pages_pruned += st.pages_pruned
+            for f in dataclasses.fields(IOStats):
+                setattr(total, f.name,
+                        getattr(total, f.name) + getattr(st, f.name))
         return total

@@ -1,0 +1,448 @@
+"""Pipelined I/O subsystem tests: scheduler output parity with serial
+execution (v0/v1/v2 and mixed-version globs), bounded read-ahead and early
+exit, coalesce-gap configuration and hole accounting, the process-wide
+footer cache (hits, invalidation, concurrency), and the loader/sink wiring.
+"""
+
+import os
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BullionReader, BullionWriter, ColumnSpec
+from repro.core.footer import (FORMAT_V0, FORMAT_V1, FooterBuilder, MAGIC,
+                               Sec, read_footer)
+from repro.core.reader import COALESCE_GAP, default_coalesce_gap
+from repro.dataset import (clear_footer_cache, dataset, cached_footer,
+                           invalidate_cached_footer)
+from repro.scan import C
+
+COLS = ["id", "val", "seq", "tag"]
+
+
+def _data_preads(st):
+    """Preads net of footer reads (2 per shard whose footer was charged —
+    a cache-hit open charges neither the preads nor the footer bytes)."""
+    return st.preads - (2 if st.footer_bytes else 0)
+
+
+def _write(path, *, n=1000, rows_per_group=256, page_rows=None,
+           collect_stats=True, id_base=0, seed=0):
+    """Clustered table (sorted ids) with scalar, list, and string columns."""
+    rng = np.random.default_rng(seed)
+    schema = [
+        ColumnSpec("id", "int64"),
+        ColumnSpec("val", "float32"),
+        ColumnSpec("seq", "list<int64>"),
+        ColumnSpec("tag", "string"),
+    ]
+    table = {
+        "id": np.arange(id_base, id_base + n, dtype=np.int64),
+        "val": rng.random(n).astype(np.float32),
+        "seq": [rng.integers(0, 50, int(rng.integers(0, 5))).astype(np.int64)
+                for _ in range(n)],
+        "tag": [b"t%d" % (i % 7) for i in range(n)],
+    }
+    w = BullionWriter(path, schema, rows_per_group=rows_per_group,
+                      page_rows=page_rows, collect_stats=collect_stats)
+    w.write_table(table)
+    w.close()
+    return table
+
+
+def _strip_page_index(path):
+    """Rewrite the footer without ``Sec.CHUNK_PAGE_COUNT`` (pre-v2 file)."""
+    fv, foot_off = read_footer(path)
+    fb = FooterBuilder()
+    for sid in Sec:
+        if fv.has(sid) and sid != Sec.CHUNK_PAGE_COUNT:
+            fb.put(sid, bytes(fv.raw(sid)))
+    meta = fv.meta.copy()
+    meta[7] = FORMAT_V1 if fv.has_stats else FORMAT_V0
+    fb.put(Sec.META, meta)
+    footer = fb.build()
+    with open(path, "r+b") as f:
+        f.seek(foot_off)
+        f.write(footer)
+        f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        f.truncate()
+    invalidate_cached_footer(path)
+
+
+def _assert_tables_equal(got, want):
+    assert np.array_equal(got["id"], want["id"])
+    assert np.allclose(got["val"], want["val"])
+    assert all(np.array_equal(a, b) for a, b in zip(got["seq"], want["seq"]))
+    assert got["tag"] == want["tag"]
+
+
+@pytest.fixture
+def mixed_dir(tmp_path):
+    """A glob of a v0 shard, a single-page v1 shard, and a multi-page v2
+    shard — the full backward-compat read matrix."""
+    d = tmp_path / "mixed"
+    d.mkdir()
+    t0 = _write(str(d / "part-000.bln"), n=600, rows_per_group=200,
+                page_rows=200, collect_stats=False, id_base=0, seed=10)
+    _strip_page_index(str(d / "part-000.bln"))
+    t1 = _write(str(d / "part-001.bln"), n=600, rows_per_group=200,
+                page_rows=200, collect_stats=True, id_base=600, seed=11)
+    _strip_page_index(str(d / "part-001.bln"))
+    t2 = _write(str(d / "part-002.bln"), n=600, rows_per_group=200,
+                page_rows=25, collect_stats=True, id_base=1200, seed=12)
+    tables = {k: (list(t0[k]) + list(t1[k]) + list(t2[k]))
+              if isinstance(t0[k], list)
+              else np.concatenate([t0[k], t1[k], t2[k]])
+              for k in t0}
+    return os.path.join(str(d), "part-*.bln"), tables
+
+
+# ---------------------------------------------------------------------------
+# pipelined == serial
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("io_depth,parallelism", [(2, 1), (4, 1), (3, 4)])
+def test_pipelined_byte_identical_mixed_versions(mixed_dir, io_depth,
+                                                 parallelism):
+    glob, tables = mixed_dir
+    with dataset(glob) as ds:
+        serial = ds.select(COLS).to_table()
+    with dataset(glob) as ds:
+        piped = ds.select(COLS).to_table(io_depth=io_depth,
+                                         parallelism=parallelism)
+    _assert_tables_equal(piped, serial)
+    assert piped["id"].tobytes() == serial["id"].tobytes()
+    assert piped["val"].tobytes() == serial["val"].tobytes()
+    _assert_tables_equal(serial, tables)
+
+
+def test_pipelined_predicate_and_rows_match_serial(mixed_dir):
+    glob, tables = mixed_dir
+    pred = (C("id") >= 550) & (C("id") < 1300)
+    with dataset(glob) as ds:
+        serial = ds.where(pred).select(COLS).to_table()
+    with dataset(glob) as ds:
+        piped = ds.where(pred).select(COLS).to_table(io_depth=3)
+    _assert_tables_equal(piped, serial)
+    with dataset(glob) as ds:
+        rows = ds.where(pred).drop_deleted(False).row_ids(io_depth=2)
+    with dataset(glob) as ds:
+        pinned_serial = ds.with_rows(rows).select(["id"]).to_table()
+        assert np.array_equal(np.sort(pinned_serial["id"]),
+                              np.sort(tables["id"][(tables["id"] >= 550)
+                                                   & (tables["id"] < 1300)]))
+    with dataset(glob) as ds:
+        pinned_piped = ds.with_rows(rows).select(["id"]) \
+            .to_table(io_depth=4, parallelism=2)
+    assert pinned_piped["id"].tobytes() == pinned_serial["id"].tobytes()
+
+
+def test_pipelined_with_deletions_matches_serial(tmp_path):
+    path = str(tmp_path / "del.bln")
+    _write(path, n=2048, rows_per_group=512, page_rows=64, seed=3)
+    with dataset(path) as ds:
+        ds.delete_where(C("id").isin([5, 700, 1500]))
+    with dataset(path) as ds:
+        serial = ds.select(COLS).to_table()
+    with dataset(path) as ds:
+        piped = ds.select(COLS).to_table(io_depth=3)
+    _assert_tables_equal(piped, serial)
+    assert not np.isin(piped["id"], [5, 700, 1500]).any()
+
+
+def test_pipelined_head_limit_early_exit(tmp_path):
+    """A head() limit abandons the task stream early; the scheduler thread
+    must shut down cleanly and the prefix must match serial execution."""
+    d = tmp_path / "shards"
+    d.mkdir()
+    for s in range(3):
+        _write(str(d / f"p{s}.bln"), n=600, rows_per_group=100,
+               id_base=600 * s, seed=s)
+    with dataset(str(d)) as ds:
+        serial = ds.select(["id"]).head(250).to_table()
+    with dataset(str(d)) as ds:
+        piped = ds.select(["id"]).head(250).to_table(io_depth=4)
+    assert piped["id"].tobytes() == serial["id"].tobytes()
+    assert len(piped["id"]) == 250
+
+
+def test_io_depth_one_degenerates_to_serial_stats(tmp_path):
+    """``io_depth=1`` must not construct a scheduler: every I/O statistic
+    (preads, bytes, coalescing, holes) matches the plain path exactly."""
+    path = str(tmp_path / "t.bln")
+    _write(path, n=1200, rows_per_group=300)
+
+    def run(**kw):
+        clear_footer_cache()
+        with dataset(path) as ds:
+            ds.select(COLS).to_table(**kw)
+            st = ds.stats
+        return st
+
+    base, one = run(), run(io_depth=1)
+    for f in ("preads", "bytes_read", "footer_bytes", "coalesced_preads",
+              "wasted_bytes", "footer_cache_hits"):
+        assert getattr(one, f) == getattr(base, f), f
+    with dataset(path) as ds:
+        with pytest.raises(ValueError):
+            ds.select(["id"]).to_table(io_depth=0)
+
+
+def test_pipelined_wide_projection_halves_preads(tmp_path):
+    """Acceptance: >= 2x fewer data preads than serial per-group reads on a
+    wide multi-shard projection, byte-identical output."""
+    d = tmp_path / "wide"
+    d.mkdir()
+    schema = [ColumnSpec("id", "int64")] + \
+        [ColumnSpec(f"f{i}", "float32") for i in range(5)]
+    n, rpg = 2048, 512
+    for s in range(2):
+        rng = np.random.default_rng(s)
+        w = BullionWriter(str(d / f"p{s}.bln"), schema, rows_per_group=rpg)
+        w.write_table({"id": np.arange(s * n, (s + 1) * n, dtype=np.int64),
+                       **{f"f{i}": rng.random(n).astype(np.float32)
+                          for i in range(5)}})
+        w.close()
+    cols = ["id"] + [f"f{i}" for i in range(5)]
+
+    def run(io_depth):
+        clear_footer_cache()
+        with dataset(str(d)) as ds:
+            tbl = ds.select(cols).to_table(io_depth=io_depth)
+            st = ds.stats
+        return tbl, st.preads - 2 * 2   # 2 footer preads per cold shard
+
+    serial_tbl, serial_preads = run(1)
+    piped_tbl, piped_preads = run(4)
+    for c in cols:
+        assert piped_tbl[c].tobytes() == serial_tbl[c].tobytes(), c
+    assert piped_preads * 2 <= serial_preads, \
+        f"{serial_preads} serial vs {piped_preads} pipelined data preads"
+
+
+# ---------------------------------------------------------------------------
+# coalesce gap configuration + hole accounting
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_gap_env_and_argument(tmp_path, monkeypatch):
+    path = str(tmp_path / "gap.bln")
+    _write(path, n=512, rows_per_group=256)
+    assert default_coalesce_gap() == COALESCE_GAP
+    monkeypatch.setenv("BULLION_COALESCE_GAP", "131072")
+    assert default_coalesce_gap() == 131072
+    monkeypatch.setenv("BULLION_COALESCE_GAP", "nope")
+    with pytest.raises(ValueError):
+        default_coalesce_gap()
+    monkeypatch.setenv("BULLION_COALESCE_GAP", "-1")
+    with pytest.raises(ValueError):
+        default_coalesce_gap()
+    with pytest.raises(ValueError):            # the argument path agrees
+        with dataset(path, coalesce_gap=-1) as ds:
+            ds.select(["id"]).to_table()
+
+    # gap 0 (via env): only physically contiguous ranges merge — no hole
+    # is ever bridged, so projecting around the middle columns ("id" and
+    # "seq" skip "val") splits into one read per column run
+    gapped = ["id", "seq"]
+    monkeypatch.setenv("BULLION_COALESCE_GAP", "0")
+    with dataset(path) as ds:
+        ds.select(gapped).to_table()
+        st0 = ds.stats
+    assert st0.wasted_bytes == 0
+    monkeypatch.delenv("BULLION_COALESCE_GAP")
+
+    # the dataset() argument overrides the env default per open
+    with dataset(path, coalesce_gap=0) as ds:
+        ds.select(gapped).to_table()
+        st_arg = ds.stats
+    assert st_arg.wasted_bytes == 0
+    # same layout, same split reads
+    assert _data_preads(st_arg) == _data_preads(st0)
+
+    # default gap: the hole across the skipped column bridges and preads
+    # collapse, with the hole bytes accounted
+    with dataset(path) as ds:
+        ds.select(gapped).to_table()
+        st = ds.stats
+    assert st.coalesced_preads > 0
+    assert _data_preads(st) < _data_preads(st0)
+    assert st.wasted_bytes > 0
+
+
+def test_wasted_bytes_accounts_coalescing_holes(tmp_path):
+    """Projecting two non-adjacent columns bridges the middle column's
+    pages: the hole bytes must land in ``wasted_bytes`` (and only then)."""
+    path = str(tmp_path / "holes.bln")
+    w = BullionWriter(path, [ColumnSpec("a", "int64"),
+                             ColumnSpec("b", "int64"),
+                             ColumnSpec("c", "int64")], rows_per_group=512)
+    w.write_table({k: np.arange(1024, dtype=np.int64) for k in "abc"})
+    w.close()
+    with dataset(path) as ds:
+        ds.select(["a", "c"]).to_table()
+        st = ds.stats
+    assert st.coalesced_preads > 0
+    assert st.wasted_bytes > 0          # read across b's pages
+    with dataset(path, coalesce_gap=0) as ds:
+        ds.select(["a", "c"]).to_table()
+        split = ds.stats
+    assert split.wasted_bytes == 0
+    assert split.bytes_read - split.footer_bytes \
+        == (st.bytes_read - st.footer_bytes) - st.wasted_bytes
+
+
+# ---------------------------------------------------------------------------
+# footer cache
+# ---------------------------------------------------------------------------
+
+
+def test_footer_cache_hits_and_zero_footer_preads(tmp_path):
+    path = str(tmp_path / "cache.bln")
+    table = _write(path, n=400, rows_per_group=100)
+    clear_footer_cache()
+    with dataset(path) as ds:
+        cold_tbl = ds.select(COLS).to_table()
+        cold = ds.stats
+    assert cold.footer_cache_hits == 0 and cold.footer_bytes > 0
+    with dataset(path) as ds:
+        warm_tbl = ds.select(COLS).to_table()
+        warm = ds.stats
+    assert warm.footer_cache_hits == 1
+    assert warm.footer_bytes == 0       # no footer pread, no re-parse
+    assert warm.preads == cold.preads - 2
+    _assert_tables_equal(warm_tbl, cold_tbl)
+    _assert_tables_equal(warm_tbl, table)
+
+
+def test_footer_cache_invalidates_on_writer_rewrite(tmp_path):
+    """An in-process rewrite at the same path must serve the new footer even
+    if filesystem timestamps are too coarse to distinguish the versions."""
+    path = str(tmp_path / "rw.bln")
+    _write(path, n=100, rows_per_group=50, id_base=0)
+    with dataset(path) as ds:
+        assert ds.select(["id"]).to_table()["id"][0] == 0
+    st = os.stat(path)
+    _write(path, n=100, rows_per_group=50, id_base=5000)
+    # deliberately restore the old timestamps: only the explicit
+    # writer-close invalidation can catch this rewrite
+    os.utime(path, ns=(st.st_atime_ns, st.st_mtime_ns))
+    with dataset(path) as ds:
+        got = ds.select(["id"]).to_table()["id"]
+    assert got[0] == 5000
+
+
+def test_footer_cache_invalidates_on_external_replace(tmp_path):
+    """A rewrite that bypasses our writers (different inode/mtime/size) is
+    caught by the stat validator alone."""
+    p1, p2 = str(tmp_path / "a.bln"), str(tmp_path / "b.bln")
+    _write(p1, n=100, rows_per_group=50, id_base=0)
+    _write(p2, n=100, rows_per_group=50, id_base=7000)
+    with dataset(p1) as ds:
+        assert ds.select(["id"]).to_table()["id"][0] == 0
+    os.replace(p2, p1)                  # no in-process invalidation hook
+    with dataset(p1) as ds:
+        got = ds.select(["id"]).to_table()["id"]
+    assert got[0] == 7000
+
+
+def test_footer_cache_invalidates_on_delete_rows(tmp_path):
+    from repro.core import Compliance, delete_rows
+    path = str(tmp_path / "del.bln")
+    _write(path, n=400, rows_per_group=100)
+    with dataset(path) as ds:
+        assert ds.count_rows() == 400   # footer cached here
+    delete_rows(path, np.arange(10), Compliance.LEVEL1)
+    with dataset(path) as ds:
+        assert ds.count_rows() == 390   # post-delete footer, not the cache
+
+
+def test_concurrent_datasets_share_one_cached_footer(tmp_path):
+    path = str(tmp_path / "conc.bln")
+    table = _write(path, n=600, rows_per_group=150)
+    clear_footer_cache()
+    fv, off, hit = cached_footer(path)
+    assert not hit and fv.num_rows == 600
+    results: list = [None] * 8
+
+    def worker(i):
+        try:
+            with dataset(path) as ds:
+                results[i] = (ds.stats.footer_cache_hits == 0,
+                              ds.select(["id", "val"]).to_table(
+                                  io_depth=2 + i % 3))
+        except Exception as e:  # pragma: no cover - surfaced by assert
+            results[i] = e
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for r in results:
+        assert not isinstance(r, Exception), r
+        miss, tbl = r
+        assert not miss                  # every open hit the shared footer
+        assert np.array_equal(tbl["id"], table["id"])
+        assert np.allclose(tbl["val"], table["val"])
+
+
+# ---------------------------------------------------------------------------
+# loader + sink wiring
+# ---------------------------------------------------------------------------
+
+
+def test_loader_prefetch_pipelined_matches_serial(tmp_path):
+    from repro.data.loader import BullionLoader
+    from repro.data.synthetic import write_lm_corpus
+    d = tmp_path / "corpus"
+    d.mkdir()
+    for s in range(3):
+        write_lm_corpus(str(d / f"part-{s:03d}.bln"), n_docs=24, vocab=64,
+                        doc_len=64, rows_per_group=8, seed=s)
+
+    def take(prefetch, k=6):
+        loader = BullionLoader(str(d), batch_size=2, seq_len=16,
+                               prefetch=prefetch)
+        try:
+            out = []
+            for batch, cursor in loader:
+                out.append((batch.copy(), cursor.epoch, cursor.group))
+                if len(out) >= k:
+                    return out
+        finally:
+            loader.close()
+
+    serial, piped = take(prefetch=1), take(prefetch=3)
+    for (b0, e0, g0), (b1, e1, g1) in zip(serial, piped):
+        assert b0.tobytes() == b1.tobytes()
+        assert (e0, g0) == (e1, g1)
+
+
+def test_sink_io_depth_matches_serial(tmp_path):
+    src = str(tmp_path / "src")
+    os.makedirs(src)
+    for s in range(2):
+        _write(os.path.join(src, f"p{s}.bln"), n=500, rows_per_group=100,
+               id_base=500 * s, seed=s)
+    with dataset(src) as ds:
+        ds.where(C("id") < 800).select(COLS).write_to(
+            str(tmp_path / "out_serial"), shard_rows=300)
+    with dataset(src) as ds:
+        ds.where(C("id") < 800).select(COLS).write_to(
+            str(tmp_path / "out_piped"), shard_rows=300, io_depth=4,
+            parallelism=2)
+    with dataset(str(tmp_path / "out_serial")) as ds:
+        serial = ds.select(COLS).to_table()
+    with dataset(str(tmp_path / "out_piped")) as ds:
+        piped = ds.select(COLS).to_table()
+    _assert_tables_equal(piped, serial)
+    # reclustering path (whole-table sort) with a pipelined read side
+    with dataset(src) as ds:
+        ds.select(COLS).write_to(str(tmp_path / "sorted"), sort_by="val",
+                                 io_depth=3)
+    with dataset(str(tmp_path / "sorted")) as ds:
+        got = ds.select(["val"]).to_table()["val"]
+    assert np.all(np.diff(got) >= 0)
