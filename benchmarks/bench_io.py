@@ -99,11 +99,15 @@ def run(report):
                f"({n_shards} shards x {groups_per_shard} groups, "
                f"{len(cols)} cols), wall {s_dt * 1e3:.1f}ms -> "
                f"{p_dt * 1e3:.1f}ms ({s_dt / max(p_dt, 1e-9):.2f}x)",
-               preads=p_st.preads, bytes_read=p_st.bytes_read)
+               preads=p_st.preads, bytes_read=p_st.bytes_read,
+               coalesced_preads=p_st.coalesced_preads,
+               wasted_bytes=p_st.wasted_bytes)
         report("io/wide_wall_clock_vs_serial", s_dt / max(p_dt, 1e-9),
                f"byte-identical output, {p_st.coalesced_preads} page reads "
                f"coalesced, {p_st.wasted_bytes}B hole bytes",
-               preads=p_st.preads, bytes_read=p_st.bytes_read)
+               preads=p_st.preads, bytes_read=p_st.bytes_read,
+               coalesced_preads=p_st.coalesced_preads,
+               wasted_bytes=p_st.wasted_bytes)
 
         # --- selective point probe (clustered ids -> zone-map pruning) ------
         victim = rows_per_shard + rows_per_group // 2

@@ -1,17 +1,22 @@
 # One function per paper table/figure. Prints
-# ``name,us_per_call,pruned_bytes,pages_pruned,preads,bytes_read,
-# footer_cache_hits,derived`` CSV; ``pruned_bytes`` is the plan-proven
-# avoided I/O (IOStats.bytes_pruned) and ``pages_pruned`` the page reads
-# those proofs skipped (IOStats.pages_pruned — group- plus page-granular
-# zone maps), so pruning regressions at either granularity show up in the
-# perf trajectory. ``preads``/``bytes_read`` track the I/O a probe actually
-# issued (the pipelined scheduler's coalescing win) and
+# ``name,us_per_call,<STAT_COLUMNS...>,derived`` CSV; ``pruned_bytes`` is
+# the plan-proven avoided I/O (IOStats.bytes_pruned) and ``pages_pruned``
+# the page reads those proofs skipped (IOStats.pages_pruned — group- plus
+# page-granular zone maps), so pruning regressions at either granularity
+# show up in the perf trajectory. ``preads``/``bytes_read`` track the I/O a
+# probe actually issued, ``coalesced_preads``/``wasted_bytes`` the pipelined
+# scheduler's batching win and its hole-read cost, and
 # ``footer_cache_hits`` the shard opens served without a metadata pread;
-# all blank for suites where they don't apply.
+# all blank for suites where they don't apply. ``STAT_FIELDS`` maps each
+# stat column to the ``IOStats`` field it mirrors (regression-tested, so
+# the CSV schema can't silently drift from the accounting).
 #
 # ``--only scan,compact`` restricts to matching suites (substring match on
 # the label or module name — select the I/O suite with ``--only bench_io``;
 # the bare key "io" also matches deletion/quantization/projection);
+# ``--trace out.json`` wraps each suite in a span and writes one merged
+# Chrome trace_event JSON (open in Perfetto / chrome://tracing) covering
+# every instrumented stage the suites exercised;
 # ``BULLION_BENCH_SMOKE=1`` makes the suites that honor it (scan, compact,
 # bench_io) shrink their datasets — the CI smoke mode that keeps the
 # perf-trajectory CSV accumulating on every push.
@@ -21,6 +26,19 @@ import argparse
 import sys
 import time
 import traceback
+
+# CSV stat column -> the IOStats field it reports (order = column order
+# between ``us_per_call`` and ``derived``)
+STAT_FIELDS = {
+    "pruned_bytes": "bytes_pruned",
+    "pages_pruned": "pages_pruned",
+    "preads": "preads",
+    "bytes_read": "bytes_read",
+    "footer_cache_hits": "footer_cache_hits",
+    "coalesced_preads": "coalesced_preads",
+    "wasted_bytes": "wasted_bytes",
+}
+STAT_COLUMNS = tuple(STAT_FIELDS)
 
 
 def main(argv=None) -> None:
@@ -33,20 +51,21 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings; run only suites whose "
                          "label or module matches (e.g. --only scan,compact)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record spans across all suites and write one "
+                         "merged Chrome trace_event JSON (Perfetto) to PATH")
     args = ap.parse_args(argv)
 
-    def report(name: str, value: float, derived: str = "",
-               pruned_bytes=None, pages_pruned=None, preads=None,
-               bytes_read=None, footer_cache_hits=None) -> None:
-        def cell(v):
-            return "" if v is None else str(int(v))
-        pruned, pages = cell(pruned_bytes), cell(pages_pruned)
-        pr, br, fch = cell(preads), cell(bytes_read), cell(footer_cache_hits)
-        print(f"{name},{value:.6g},{pruned},{pages},{pr},{br},{fch},"
-              f"{derived}", flush=True)
+    def report(name: str, value: float, derived: str = "", **stats) -> None:
+        bad = set(stats) - set(STAT_COLUMNS)
+        if bad:
+            raise TypeError(f"unknown stat column(s) {sorted(bad)}; "
+                            f"expected one of {list(STAT_COLUMNS)}")
+        cells = ",".join("" if stats.get(c) is None else str(int(stats[c]))
+                         for c in STAT_COLUMNS)
+        print(f"{name},{value:.6g},{cells},{derived}", flush=True)
 
-    print("name,us_per_call,pruned_bytes,pages_pruned,preads,bytes_read,"
-          "footer_cache_hits,derived")
+    print("name,us_per_call," + ",".join(STAT_COLUMNS) + ",derived")
     suites = [
         ("metadata  (Fig. 5)", bench_metadata),
         ("deletion  (§2.1)", bench_deletion),
@@ -66,15 +85,33 @@ def main(argv=None) -> None:
                   if any(k in label or k in mod.__name__ for k in keys)]
         if not suites:
             sys.exit(f"--only {args.only!r} matched no suites")
+    scope = tracer = None
+    if args.trace:
+        from repro.obs import trace as _trace
+        # a forwarding scope, not enable(): a concurrent BULLION_TRACE
+        # recording keeps seeing every span
+        scope = _trace.collect()
+        tracer = scope.__enter__()
     failures = 0
     for label, mod in suites:
         t0 = time.time()
         try:
-            mod.run(report)
+            if tracer is not None:
+                with tracer.span(f"bench.{mod.__name__.rsplit('.', 1)[-1]}",
+                                 "bench"):
+                    mod.run(report)
+            else:
+                mod.run(report)
             print(f"# {label}: done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {label}: FAILED\n{traceback.format_exc()}", flush=True)
+    if scope is not None:
+        from repro.obs.export import write_trace
+        scope.__exit__(None, None, None)
+        write_trace(args.trace, tracer.spans, dropped=tracer.dropped)
+        print(f"# trace: {args.trace} ({len(tracer.spans)} span(s), "
+              f"{tracer.dropped} dropped)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -1,8 +1,9 @@
 """Bullion quickstart: write a wide ML table, query it through the lazy
 ``Dataset`` API, scale the same plan to a sharded directory (pipelining its
 I/O with ``io_depth=``), delete a user GDPR-style, audit the physical
-erasure, then compact + recluster the file into a fresh sharded dataset
-with ``Dataset.write_to``.
+erasure, compact + recluster the file into a fresh sharded dataset with
+``Dataset.write_to``, then profile a scan with the observability layer
+(``explain(analyze=True)``, ``Dataset.profile``, the metrics registry).
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -25,6 +26,22 @@ per-group read path):
 * repeated ``dataset()`` opens of unchanged shards are served by the
   process-wide footer cache (``IOStats.footer_cache_hits``) — no footer
   pread, no re-parse.
+
+Observability (all off by default; disabled tracing allocates nothing on
+the hot path):
+
+* ``Dataset.explain(analyze=True)`` — executes the plan under a scoped
+  tracer and appends per-stage wall time / rows / pages / bytes plus the
+  exact ``IOStats`` delta the run charged.
+* ``Dataset.profile("trace.json")`` — same execution, exported as Chrome
+  ``trace_event`` JSON; open it in Perfetto (ui.perfetto.dev) or
+  chrome://tracing to see preads overlap decode on the timeline.
+* ``BULLION_TRACE=trace.json`` env — trace a whole process (any workload,
+  no code changes) and export at exit; ``benchmarks/run.py --trace`` does
+  the same for the benchmark suites.
+* ``repro.obs.metrics.snapshot()`` — the always-on process-wide counters
+  (retired ``IOStats`` fields) and histograms (coalesced-run sizes,
+  scheduler read-ahead depth; pread/decode latency while tracing).
 """
 
 import os
@@ -184,6 +201,26 @@ def main():
     print(f"hot-CTR probe after recluster: {n_hot} rows, "
           f"{post.bytes_pruned:,}B pruned (was {pre.bytes_pruned:,}B "
           "on the unclustered input)")
+
+    # --- observability: what did that scan actually do? ---------------------
+    # explain(analyze=True) executes the plan under a scoped tracer: the
+    # static plan tree plus per-stage calls/time/attributes and the exact
+    # IOStats delta the run charged. profile() exports the same spans as
+    # Chrome trace JSON for Perfetto; BULLION_TRACE=path does it process-
+    # wide with zero code changes.
+    with dataset(compact_dir) as ds:
+        print(ds.where(C("ctr_7d") >= 0.99).select(["user_id", "ctr_7d"])
+                .explain(analyze=True, io_depth=2))
+    trace_path = os.path.join(td, "scan-trace.json")
+    with dataset(compact_dir) as ds:
+        prof = ds.select(wide_cols).profile(trace_path, io_depth=4)
+    print(f"profile: {len(prof.spans)} spans -> {trace_path} "
+          "(open in ui.perfetto.dev or chrome://tracing)")
+    from repro.obs import metrics
+    snap = metrics.snapshot()
+    io_counters = {k: v for k, v in snap.items()
+                   if k.startswith("bullion.io.") and isinstance(v, (int, float))}
+    print(f"process-wide metrics (retired IOStats): {io_counters}")
 
 
 if __name__ == "__main__":

@@ -16,14 +16,17 @@ the equivalent one-file plans.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
 import time
 from dataclasses import dataclass
-from typing import Iterator, Optional, Sequence
+from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .footer import ColKind, Sec, read_footer
 from .quantization import QuantSpec
 
@@ -65,6 +68,31 @@ class IOStats:
                               # bridged a gap between two wanted ranges
     footer_cache_hits: int = 0  # shard opens served from the process-wide
                                 # footer cache (no footer pread, no parse)
+
+    # -- aggregation (the one field-complete merge every consumer uses) -------
+    def merge(self, other: "IOStats") -> "IOStats":
+        """Field-wise in-place add. Defined on the dataclass itself so a new
+        counter field can never silently drop out of cross-reader
+        aggregation (``DataSource.stats``, benchmark CSVs, the metrics
+        registry all go through here)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    @staticmethod
+    def sum(items: Iterable["IOStats"]) -> "IOStats":
+        total = IOStats()
+        for st in items:
+            total.merge(st)
+        return total
+
+    def delta(self, before: "IOStats") -> "IOStats":
+        """Field-wise ``self - before``: what one execution added to a
+        cumulative snapshot (``explain(analyze=True)`` reconciliation)."""
+        out = IOStats()
+        for f in dataclasses.fields(self):
+            setattr(out, f.name, getattr(self, f.name) - getattr(before, f.name))
+        return out
 
 
 class BullionReader:
@@ -143,11 +171,20 @@ class BullionReader:
     def _pread(self, offset: int, size: int) -> bytes:
         """Positional read: ``os.pread`` never moves a shared file cursor,
         so concurrent ScanTasks on the same shard (parallel execution) are
-        safe on one handle. Stats mutate under a lock for the same reason."""
+        safe on one handle. Stats mutate under a lock for the same reason.
+        Per-call latency lands in the ``bullion.io.pread_seconds`` histogram
+        only while tracing is enabled (two extra clock reads are not free on
+        the disabled hot path)."""
         f = self._f
         if f is None:
             raise ValueError(f"{self.path}: reader is closed")
-        data = os.pread(f.fileno(), size, offset)
+        if _trace.enabled():
+            t0 = time.perf_counter()
+            data = os.pread(f.fileno(), size, offset)
+            _metrics.histogram("bullion.io.pread_seconds").observe(
+                time.perf_counter() - t0)
+        else:
+            data = os.pread(f.fileno(), size, offset)
         with self._stats_lock:
             self.stats.preads += 1
             self.stats.bytes_read += size
@@ -157,7 +194,10 @@ class BullionReader:
                    extents: Sequence[tuple[int, int, int]]) -> dict[int, bytes]:
         """One positional read covering ``[off, end)``, sliced back into the
         page extents ``(page_off, size, page_id)`` it coalesced. Accounts the
-        preads the merge avoided and the hole bytes it read to bridge gaps."""
+        preads the merge avoided and the hole bytes it read to bridge gaps;
+        every coalesced submission's size feeds ``bullion.io.run_bytes``
+        (once per run — cheap enough to stay on)."""
+        _metrics.histogram("bullion.io.run_bytes").observe(end - off)
         buf = self._pread(off, end - off)
         covered = sum(s for _, s, _ in extents)
         with self._stats_lock:

@@ -45,6 +45,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ..obs import trace as _trace
 from . import pages
 from .encodings import EncodeContext
 from .encodings.base import dtype_code
@@ -249,6 +250,11 @@ class BullionWriter:
         self._write_group(self._pop_rows(take), take)
 
     def _write_group(self, table: dict, n_rows: int) -> None:
+        with _trace.span("write.group", cat="sink", rows=n_rows,
+                         group=self._n_groups):
+            self._write_group_inner(table, n_rows)
+
+    def _write_group_inner(self, table: dict, n_rows: int) -> None:
         if self._f is None:
             self._f = open(self.path, "wb")
             # §2.5 column layout reordering (hot columns adjacent)

@@ -27,6 +27,8 @@ from typing import Iterator, Optional
 import numpy as np
 
 from ..dataset import dataset
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 
 
 @dataclass
@@ -110,13 +112,19 @@ class BullionLoader:
 
     def _read_group(self, g: int, reader=None) -> np.ndarray:
         task = self._tasks[g]
-        tbl = self.dataset.read_group(task.group, shard=task.shard,
-                                      reader=reader)
-        docs = tbl[self.column] if tbl is not None else []
-        if len(docs) == 0:
-            return np.zeros(0, np.int32)
-        return np.concatenate([np.asarray(d, np.int32) for d in docs]) \
-            if isinstance(docs, list) else np.asarray(docs, np.int32)
+        sp = _trace.span("loader.read_group", cat="loader",
+                         shard=task.shard, group=task.group, rank=self.rank)
+        with sp:
+            tbl = self.dataset.read_group(task.group, shard=task.shard,
+                                          reader=reader)
+            docs = tbl[self.column] if tbl is not None else []
+            if len(docs) == 0:
+                return np.zeros(0, np.int32)
+            out = np.concatenate([np.asarray(d, np.int32) for d in docs]) \
+                if isinstance(docs, list) else np.asarray(docs, np.int32)
+            if sp.enabled:
+                sp.set(tokens=int(len(out)))
+            return out
 
     # -- iteration ------------------------------------------------------------------
     def _put(self, item) -> bool:
@@ -145,11 +153,23 @@ class BullionLoader:
                         self._buf = np.concatenate(
                             [self._buf, self._read_group(g, reader)])
                         while len(self._buf) >= self._tokens_per_batch:
-                            batch = self._buf[:self._tokens_per_batch] \
-                                .reshape(self.batch_size, self.seq_len + 1)
-                            self._buf = self._buf[self._tokens_per_batch:]
-                            cursor = LoaderState(self.state.epoch, g + 1)
-                            if not self._put((batch.copy(), cursor)):
+                            # batch assembly: slice + reshape + copy out of
+                            # the token buffer (the host-side cost between
+                            # decode and the consumer queue)
+                            with _trace.span("loader.batch", cat="loader",
+                                             rank=self.rank,
+                                             tokens=self._tokens_per_batch):
+                                batch = self._buf[:self._tokens_per_batch] \
+                                    .reshape(self.batch_size,
+                                             self.seq_len + 1)
+                                self._buf = \
+                                    self._buf[self._tokens_per_batch:]
+                                cursor = LoaderState(self.state.epoch, g + 1)
+                                item = (batch.copy(), cursor)
+                            _metrics.histogram(
+                                "bullion.loader.queue_depth") \
+                                .observe(self._queue.qsize())
+                            if not self._put(item):
                                 return
                         self.state.group = g + 1
                 finally:

@@ -10,6 +10,8 @@ datasets.
 
 from __future__ import annotations
 
+import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Iterator, Optional, Sequence
 
@@ -17,6 +19,7 @@ import numpy as np
 
 from ..core.footer import ColKind, Sec
 from ..core.reader import BullionReader, IOStats
+from ..obs import trace as _trace
 from ..scan.predicate import Predicate
 from . import executor
 from .plan import LogicalPlan, OptimizedPlan, PhysicalPlan, ScanTask, \
@@ -156,8 +159,57 @@ class Dataset:
         self._credit(phys)
         return phys.tasks
 
-    def explain(self) -> str:
-        """Human-readable logical + physical plan."""
+    def explain(self, analyze: bool = False, *,
+                parallelism: int = 1, io_depth: int = 1) -> str:
+        """Human-readable logical + physical plan.
+
+        ``analyze=True`` additionally *executes* the plan under a scoped
+        tracer and appends what actually happened: wall time, rows out,
+        per-stage call counts / summed time / summed attributes (pages,
+        bytes, rows...), and a machine-parsable ``io:`` line holding the
+        ``IOStats`` delta this execution charged (every field, so the
+        rendering reconciles exactly with ``Dataset.stats``). Results are
+        materialized and discarded; ``parallelism``/``io_depth`` shape the
+        execution like any other terminal. Run it on a fresh instance to
+        also see the ``plan.optimize``/``plan.lower`` spans (plans cache
+        per instance)."""
+        if not analyze:
+            return self._explain_static()
+        before = self._source.stats
+        # install the collector before plan() so optimize/lower spans land
+        # in the report on a fresh instance; forwarding keeps a concurrent
+        # BULLION_TRACE recording complete
+        with _trace.collect() as tracer:
+            static = self._explain_static()
+            t0 = time.perf_counter()
+            tasks = rows = 0
+            for _, res in self._execute(parallelism=parallelism,
+                                        io_depth=io_depth):
+                tasks += 1
+                rows += len(res.row_ids)
+            wall = time.perf_counter() - t0
+        io = self._source.stats.delta(before)
+        agg = tracer.aggregate()
+        lines = [static, "Execution (analyze=True):",
+                 f"  wall: {wall * 1e3:.3f} ms  tasks: {tasks}  "
+                 f"rows out: {rows}",
+                 f"  {'stage':<20}{'calls':>7}{'time':>13}  detail"]
+        for name in sorted(agg, key=lambda n: -agg[n].seconds):
+            a = agg[name]
+            detail = " ".join(
+                f"{k}={a.args[k]:.3f}" if isinstance(a.args[k], float)
+                else f"{k}={a.args[k]}" for k in sorted(a.args))
+            lines.append((f"  {name:<20}{a.count:>7}"
+                          f"{a.seconds * 1e3:>10.3f} ms  {detail}").rstrip())
+        bits = []
+        for f in dataclasses.fields(io):
+            v = getattr(io, f.name)
+            bits.append(f"{f.name}={v:.6f}" if isinstance(v, float)
+                        else f"{f.name}={v}")
+        lines.append("  io: " + " ".join(bits))
+        return "\n".join(lines)
+
+    def _explain_static(self) -> str:
         opt = self.plan()
         phys = self.physical_plan()
         p = self._plan
@@ -225,14 +277,16 @@ class Dataset:
 
         def run(item) -> Optional[executor.GroupResult]:
             i, task = item
-            reader = sched.reader_for(i) if sched is not None \
-                else self._source.reader(task.shard)
-            return executor.execute_group(
-                reader, task.group,
-                columns=cols, predicate=p.predicate,
-                rows=task.rows, drop_deleted=p.drop_deleted,
-                dequant=p.dequantize, use_kernel=p.use_kernel,
-                pages=task.pages)
+            with _trace.span("exec.task", cat="exec",
+                             shard=task.shard, group=task.group):
+                reader = sched.reader_for(i) if sched is not None \
+                    else self._source.reader(task.shard)
+                return executor.execute_group(
+                    reader, task.group,
+                    columns=cols, predicate=p.predicate,
+                    rows=task.rows, drop_deleted=p.drop_deleted,
+                    dequant=p.dequantize, use_kernel=p.use_kernel,
+                    pages=task.pages)
 
         for (_, task), res in executor.run_tasks(
                 list(enumerate(phys.tasks)), run, parallelism, io=sched):
@@ -373,6 +427,23 @@ class Dataset:
                    for _, res in self._execute(output_columns=(),
                                                parallelism=parallelism,
                                                io_depth=io_depth))
+
+    def profile(self, path: Optional[str] = None, *,
+                parallelism: int = 1, io_depth: int = 1):
+        """Execute the plan under a scoped tracer and return the collected
+        ``obs.export.Profile`` (spans + Chrome ``trace_event`` rendering).
+        ``path`` additionally writes the trace JSON — open it in Perfetto
+        (ui.perfetto.dev) or chrome://tracing. Results are discarded; use
+        ``BULLION_TRACE=path`` to trace a real workload instead."""
+        from ..obs.export import Profile
+        with _trace.collect() as tracer:
+            for _ in self._execute(parallelism=parallelism,
+                                   io_depth=io_depth):
+                pass
+        prof = Profile(tracer)
+        if path is not None:
+            prof.write(path)
+        return prof
 
     # -- write path (materialization sink) ---------------------------------------
     def write_to(self, out_dir: str, *, shard_rows: Optional[int] = None,

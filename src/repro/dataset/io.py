@@ -40,6 +40,8 @@ import threading
 from typing import TYPE_CHECKING, Optional, Sequence
 
 from ..core.reader import BullionReader
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from .plan import ScanTask
@@ -213,9 +215,12 @@ class IOScheduler:
         """Reader for task index ``i``: blocks until its eager pages are
         staged (the request also advances the prefetch window), then returns
         a ``PrefetchReader`` over them — or the plain shared reader when
-        there is nothing staged (empty eager set, scheduler error/stop)."""
+        there is nothing staged (empty eager set, scheduler error/stop).
+        Time the executor spends blocked here is the pipeline's exposed
+        (un-overlapped) I/O — the ``io.stage_wait`` span."""
         base = self._source.reader(self._tasks[i].shard)
-        with self._cond:
+        sp = _trace.span("io.stage_wait", cat="io", task=i)
+        with sp, self._cond:
             if i > self._max_requested:
                 self._max_requested = i
                 self._cond.notify_all()
@@ -223,6 +228,8 @@ class IOScheduler:
                     and not self._stop:
                 self._cond.wait()
             pages = self._buffers.pop(i, None)
+            if sp.enabled:
+                sp.set(staged_pages=len(pages) if pages else 0)
         if pages:
             return PrefetchReader(base, pages)
         return base
@@ -233,15 +240,25 @@ class IOScheduler:
             for shard, off, end, extents, _, max_task in self._runs:
                 # admit on the run's *highest* task so no staged page is
                 # ever more than io_depth - 1 tasks past the newest request
-                with self._cond:
+                wait_sp = _trace.span("io.queue_wait", cat="io",
+                                      task=max_task)
+                with wait_sp, self._cond:
                     while not self._stop and \
                             max_task > self._max_requested + self._depth - 1:
                         self._cond.wait()
                     if self._stop:
                         return
+                    # how far the submission runs ahead of decode (window
+                    # occupancy, in tasks) — the scheduler's queue depth
+                    _metrics.histogram("bullion.io.read_ahead_tasks") \
+                        .observe(max(0, max_task - self._max_requested))
                 reader = self._source.reader(shard)
-                data = reader._pread_run(
-                    off, end, [(o, s, p) for o, s, p, _ in extents])
+                run_sp = _trace.span("io.run", cat="io", shard=shard,
+                                     bytes=end - off, extents=len(extents),
+                                     task=max_task)
+                with run_sp:
+                    data = reader._pread_run(
+                        off, end, [(o, s, p) for o, s, p, _ in extents])
                 with self._cond:
                     for _, _, p, t in extents:
                         buf = self._buffers.get(t)

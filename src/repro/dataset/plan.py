@@ -18,6 +18,7 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
+from ..obs import trace as _trace
 from ..scan.predicate import And, Predicate
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -120,6 +121,11 @@ def split_conjuncts(pred: Optional[Predicate]) -> tuple[Predicate, ...]:
 
 def optimize(plan: LogicalPlan, source: "DataSource") -> OptimizedPlan:
     """Normalize and validate a logical plan against the dataset schema."""
+    with _trace.span("plan.optimize", cat="plan"):
+        return _optimize(plan, source)
+
+
+def _optimize(plan: LogicalPlan, source: "DataSource") -> OptimizedPlan:
     names = source.column_names
     if plan.columns is None:
         output = tuple(names)
@@ -174,6 +180,18 @@ def lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
     dropped at this stage is charged to ``bytes_pruned``. Lowering is
     footer-only: no shard file handle is opened until execution.
     """
+    sp = _trace.span("plan.lower", cat="plan")
+    with sp:
+        phys = _lower(opt, source)
+        if sp.enabled:
+            sp.set(tasks=len(phys.tasks), shards=source.n_shards,
+                   groups_pruned=phys.groups_pruned,
+                   pages_pruned=phys.pages_pruned,
+                   bytes_pruned=phys.bytes_pruned)
+    return phys
+
+
+def _lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
     from ..scan.scanner import plan_scan
     from .executor import group_keep, raw_row_count, visible_row_count
 

@@ -40,6 +40,7 @@ from ..core.encodings.cascade import advise_candidates
 from ..core.footer import ColKind, FooterView, PageType, Sec
 from ..core.quantization import QUANT_DTYPE, QuantMode, QuantSpec
 from ..core.writer import BullionWriter, ColumnSpec, SortUDF
+from ..obs import trace as _trace
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from .core import Dataset
@@ -189,7 +190,9 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
                              props={"bullion.sink": "write_to"})
 
     def close_shard(w: BullionWriter) -> None:
-        info = w.close()
+        with _trace.span("sink.close_shard", cat="sink",
+                         shard=len(result.paths) - 1):
+            info = w.close()
         result.rows += info["rows"]
         result.groups += info["groups"]
         result.pages += info["pages"]
@@ -205,7 +208,11 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
                 shard_filled = 0
             take = n - off if shard_rows is None \
                 else min(n - off, shard_rows - shard_filled)
-            writer.write_table(_slice(table, off, off + take))
+            # per-group flush spans (write.group) come from the writer; this
+            # span is the sink-side unit: one slice into one output shard
+            with _trace.span("sink.write", cat="sink", rows=take,
+                             shard=len(result.paths) - 1):
+                writer.write_table(_slice(table, off, off + take))
             shard_filled += take
             result.rows_per_shard[-1] += take
             off += take
@@ -214,27 +221,30 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
                 writer = None
 
     try:
-        if sort_by is not None:
-            # a global re-cluster needs the whole surviving table at once
-            from .core import _concat_tables
-            parts = [res.table
-                     for _, res in ds._execute(parallelism=parallelism,
-                                               io_depth=io_depth)]
-            full = _concat_tables(parts, opt.output_columns)
-            if parts and _nrows(full):
-                perm = sort_by(full) if callable(sort_by) else \
-                    np.argsort(np.asarray(full[sort_by]), kind="stable")
-                emit(_permute(full, perm))
-        else:
-            for _, res in ds._execute(parallelism=parallelism,
-                                      io_depth=io_depth):
-                emit(res.table)
+        with _trace.span("sink.write_dataset", cat="sink",
+                         out_dir=out_dir, shards_in=src.n_shards):
+            if sort_by is not None:
+                # a global re-cluster needs the whole surviving table at once
+                from .core import _concat_tables
+                parts = [res.table
+                         for _, res in ds._execute(parallelism=parallelism,
+                                                   io_depth=io_depth)]
+                full = _concat_tables(parts, opt.output_columns)
+                if parts and _nrows(full):
+                    perm = sort_by(full) if callable(sort_by) else \
+                        np.argsort(np.asarray(full[sort_by]), kind="stable")
+                    emit(_permute(full, perm))
+            else:
+                for _, res in ds._execute(parallelism=parallelism,
+                                          io_depth=io_depth):
+                    emit(res.table)
 
-        if writer is not None:
-            close_shard(writer)
-        elif not result.paths:
-            # zero surviving rows: still materialize one empty, openable shard
-            close_shard(open_shard())
+            if writer is not None:
+                close_shard(writer)
+            elif not result.paths:
+                # zero surviving rows: still materialize one empty,
+                # openable shard
+                close_shard(open_shard())
     except BaseException:
         # a failed rewrite must not leave half a dataset behind: finished
         # part files would read as a complete (wrong) dataset and block the

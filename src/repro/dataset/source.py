@@ -17,7 +17,6 @@ unchanged shard, validated by (mtime, size, inode) and counted in
 
 from __future__ import annotations
 
-import dataclasses
 import glob as _glob
 import os
 import threading
@@ -30,6 +29,7 @@ import numpy as np
 from ..core.footer import (MAGIC, FooterView, Sec,
                            register_footer_invalidator, read_footer)
 from ..core.reader import BullionReader, IOStats
+from ..obs import metrics as _metrics
 
 PathSpec = Union[str, Sequence[str]]
 
@@ -162,6 +162,9 @@ class DataSource:
         self.coalesce_gap = coalesce_gap   # None = reader default (env var)
         self._readers: list[Optional[BullionReader]] = \
             list(readers) if readers is not None else [None] * len(self.paths)
+        # retired accounting folds into the process-wide metrics registry as
+        # it lands here (``bullion.io.*`` counters) — the registry is the
+        # cross-dataset aggregate; ``stats`` stays the per-dataset view
         self._retired: list[IOStats] = []
         self._open_lock = threading.Lock()   # parallel tasks race reader()
         self._invalid: Optional[str] = None
@@ -186,7 +189,7 @@ class DataSource:
                 self._foot_hits.append(hit)
         hits = sum(self._foot_hits)
         if hits:
-            self._retired.append(IOStats(
+            self._retire(IOStats(
                 footer_cache_hits=hits,
                 metadata_seconds=time.perf_counter() - t0))
         self._footers = [f for f, _ in self._foots]
@@ -270,10 +273,14 @@ class DataSource:
             self._readers[0].stats.bytes_pruned += int(nbytes)
             self._readers[0].stats.pages_pruned += int(npages)
         else:
-            self._retired.append(IOStats(bytes_pruned=int(nbytes),
-                                         pages_pruned=int(npages)))
+            self._retire(IOStats(bytes_pruned=int(nbytes),
+                                 pages_pruned=int(npages)))
 
     # -- lifecycle --------------------------------------------------------------
+    def _retire(self, st: IOStats) -> None:
+        self._retired.append(st)
+        _metrics.absorb_iostats(st)
+
     def close(self) -> None:
         """Close owned readers (idempotent). Their I/O accounting is retired
         into ``stats`` so aggregates survive the handles."""
@@ -281,17 +288,13 @@ class DataSource:
             return
         for i, r in enumerate(self._readers):
             if r is not None:
-                self._retired.append(r.stats)
+                self._retire(r.stats)
                 r.close()
                 self._readers[i] = None
 
     @property
     def stats(self) -> IOStats:
         """Aggregate IOStats across live and retired shard readers."""
-        total = IOStats()
-        for st in (*self._retired,
-                   *(r.stats for r in self._readers if r is not None)):
-            for f in dataclasses.fields(IOStats):
-                setattr(total, f.name,
-                        getattr(total, f.name) + getattr(st, f.name))
-        return total
+        return IOStats.sum((*self._retired,
+                            *(r.stats for r in self._readers
+                              if r is not None)))

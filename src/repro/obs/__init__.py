@@ -1,0 +1,48 @@
+"""Observability substrate: span tracing, metrics, Perfetto trace export.
+
+The shared instrumentation layer under the whole scan/I-O/decode pipeline
+(and the substrate the serve/cloud-backend roadmap items report through).
+Three pieces, all stdlib-only with no repro imports (any layer — ``core``
+included — may depend on it without cycles):
+
+* ``trace`` — a ``Span`` tracer with context-manager/decorator API and a
+  process-wide slot. Disabled (the default) it is a no-op that allocates
+  nothing on the hot path; ``collect()`` scopes a tracer to a block
+  (forwarding to any enclosing recording), ``BULLION_TRACE=path`` records
+  process-wide and exports Chrome trace JSON at exit.
+* ``metrics`` — a process-wide ``MetricsRegistry`` of named counters and
+  log-scale histograms (pread latency, coalesced-run sizes, queue depth,
+  per-encoding-family page decode time). Counters absorb ``IOStats`` when
+  reader accounting retires; timing histograms follow ``trace.enabled()``.
+* ``export`` — Chrome ``trace_event`` rendering (``chrome_trace`` /
+  ``write_trace``) viewable in Perfetto, plus the ``Profile`` object
+  ``Dataset.profile()`` returns.
+
+Entry points most callers want::
+
+    from repro.obs import trace, metrics
+
+    with trace.collect() as tr:          # scoped tracing
+        ...                              # any Dataset/loader/sink work
+    print(tr.aggregate())                # per-stage totals
+    print(metrics.snapshot())            # process-wide counters/histograms
+"""
+
+from . import metrics, trace
+from .export import Profile, chrome_trace, write_trace
+from .metrics import (Counter, Histogram, MetricsRegistry, REGISTRY,
+                      absorb_iostats, counter, histogram, snapshot)
+from .trace import (NULL_SPAN, Span, SpanRecord, StageAgg, Tracer, collect,
+                    disable, enable, enabled, install, span, traced)
+
+# honor BULLION_TRACE=path as soon as the first instrumented module loads
+trace.init_from_env()
+
+__all__ = [
+    "trace", "metrics",
+    "Span", "SpanRecord", "StageAgg", "Tracer", "NULL_SPAN",
+    "span", "collect", "traced", "enable", "disable", "enabled", "install",
+    "Counter", "Histogram", "MetricsRegistry", "REGISTRY",
+    "counter", "histogram", "snapshot", "absorb_iostats",
+    "Profile", "chrome_trace", "write_trace",
+]

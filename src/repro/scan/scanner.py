@@ -28,6 +28,7 @@ from typing import TYPE_CHECKING, Iterator, Optional, Sequence
 import numpy as np
 
 from ..core.footer import Sec
+from ..obs import trace as _trace
 from .predicate import Predicate
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -144,6 +145,19 @@ def plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
     intersect ``pred`` with the chunk zone maps — and, inside surviving
     groups, with the per-page zone maps — and account the page/byte cost of
     every candidate group. ``pred=None`` prunes nothing."""
+    sp = _trace.span("scan.plan", cat="plan")
+    with sp:
+        plan = _plan_scan(fv, pred, columns, groups)
+        if sp.enabled:
+            sp.set(groups_kept=len(plan.groups),
+                   groups_pruned=len(plan.pruned_groups),
+                   pages_pruned=plan.pages_pruned,
+                   bytes_pruned=plan.bytes_pruned)
+    return plan
+
+
+def _plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
+               groups: Optional[Sequence[int]] = None) -> ScanPlan:
     pred_cols = sorted(pred.columns()) if pred is not None else []
     read_cols = list(dict.fromkeys([*pred_cols, *columns]))
     candidates = list(groups) if groups is not None \

@@ -1,0 +1,330 @@
+"""Observability substrate tests: span tracer (nesting, threads, disabled
+no-op), metrics registry, Chrome trace export, explain(analyze=True) /
+profile() reconciliation with IOStats, BULLION_TRACE end-to-end, and the
+benchmark-CSV <-> IOStats schema sync regression."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BullionWriter, ColumnSpec
+from repro.core.reader import IOStats
+from repro.dataset import dataset
+from repro.obs import export, metrics, trace
+from repro.scan import C
+
+
+def _write(path, *, n=1000, rows_per_group=100):
+    rng = np.random.default_rng(0)
+    w = BullionWriter(path, [ColumnSpec("id", "int64"),
+                             ColumnSpec("score", "float32")],
+                      rows_per_group=rows_per_group)
+    w.write_table({"id": np.arange(n, dtype=np.int64),
+                   "score": rng.random(n).astype(np.float32)})
+    w.close()
+    return path
+
+
+@pytest.fixture
+def shard(tmp_path):
+    return _write(str(tmp_path / "t.bln"))
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tracer():
+    """Save/restore the process-wide tracer slot: CI runs the suite under
+    BULLION_TRACE, and tests that install/disable must not leak."""
+    prev = trace.current()
+    yield
+    trace.install(prev)
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_span_records_name_args_and_duration():
+    with trace.collect() as tr:
+        with trace.span("unit.op", cat="test", pages=3) as sp:
+            sp.set(bytes=128)
+    (rec,) = tr.spans
+    assert rec.name == "unit.op" and rec.cat == "test"
+    assert rec.args == {"pages": 3, "bytes": 128}
+    assert rec.dur >= 0.0 and rec.tid == threading.get_ident()
+
+
+def test_nested_spans_both_record_and_nest_by_time():
+    with trace.collect() as tr:
+        with trace.span("outer"):
+            with trace.span("inner"):
+                pass
+    by_name = {s.name: s for s in tr.spans}
+    assert set(by_name) == {"outer", "inner"}
+    o, i = by_name["outer"], by_name["inner"]
+    # inner finished first (records append on exit) and sits inside outer
+    assert tr.spans[0].name == "inner"
+    assert o.ts <= i.ts and i.ts + i.dur <= o.ts + o.dur + 1e-9
+
+
+def test_collect_forwards_to_enclosing_tracer():
+    with trace.collect() as outer:
+        with trace.span("before"):
+            pass
+        with trace.collect() as inner:
+            with trace.span("scoped"):
+                pass
+        with trace.span("after"):
+            pass
+    assert [s.name for s in inner.spans] == ["scoped"]
+    # the outer recording saw everything, including the scoped block
+    assert [s.name for s in outer.spans] == ["before", "scoped", "after"]
+
+
+def test_collect_restores_previous_tracer_state():
+    trace.install(None)
+    with trace.collect():
+        assert trace.enabled()
+    assert not trace.enabled()
+
+
+def test_traced_decorator():
+    @trace.traced(cat="test")
+    def work(x):
+        return x + 1
+
+    trace.install(None)
+    assert work(1) == 2                 # disabled: plain call
+    with trace.collect() as tr:
+        assert work(2) == 3
+    assert len(tr.spans) == 1
+    assert tr.spans[0].name.endswith("work")
+
+
+def test_span_cap_counts_dropped():
+    with trace.collect(max_spans=2) as tr:
+        for _ in range(5):
+            with trace.span("x"):
+                pass
+    assert len(tr.spans) == 2 and tr.dropped == 3
+
+
+def test_aggregate_sums_numeric_args_only():
+    with trace.collect() as tr:
+        for i in range(3):
+            with trace.span("s", pages=2, label="text", ok=True):
+                pass
+    agg = tr.aggregate()["s"]
+    assert agg.count == 3 and agg.args == {"pages": 6}
+    assert agg.seconds >= 0.0
+
+
+def test_disabled_mode_allocates_no_spans(shard):
+    trace.install(None)
+    ds = dataset(shard).where(C("id") >= 500)
+    before = trace.allocations()
+    tbl = ds.to_table(parallelism=2, io_depth=2)
+    assert len(tbl["id"]) == 500
+    assert trace.allocations() == before, \
+        "disabled tracing must not allocate Span objects on the scan path"
+    assert trace.span("x") is trace.NULL_SPAN
+    ds.close()
+
+
+def test_thread_safety_under_parallel_scan(shard):
+    ds = dataset(shard)
+    with trace.collect() as tr:
+        ds.to_table(parallelism=4, io_depth=4)
+    execs = [s for s in tr.spans if s.name == "exec.task"]
+    assert len(execs) == 10             # one per row group, none lost
+    assert len({s.tid for s in tr.spans}) >= 2   # pool + scheduler threads
+    # every record is fully formed (no torn concurrent appends)
+    for s in tr.spans:
+        assert isinstance(s.name, str) and s.dur >= 0.0
+    ds.close()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_and_histogram_basics():
+    reg = metrics.MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(4)
+    assert reg.counter("c").value == 5
+    h = reg.histogram("h")
+    for v in (1, 2, 3, 100):
+        h.observe(v)
+    assert h.count == 4 and h.sum == 106 and h.min == 1 and h.max == 100
+    assert h.percentile(50) == 4.0      # rank-2 value (2) -> (2, 4] bucket
+    assert h.percentile(100) == 128.0   # 100 lands in the (64, 128] bucket
+    snap = reg.snapshot()
+    assert snap["c"] == 5 and snap["h"]["count"] == 4
+
+
+def test_histogram_underflow_bucket():
+    h = metrics.Histogram("u")
+    h.observe(0)
+    h.observe(-3)
+    h.observe(8)
+    assert h.buckets()[0.0] == 2 and h.buckets()[16.0] == 1
+    assert h.percentile(50) == 0.0
+
+
+def test_absorb_iostats_counts_nonzero_fields():
+    reg = metrics.MetricsRegistry()
+    st = IOStats(preads=3, bytes_read=700, metadata_seconds=0.5)
+    metrics.absorb_iostats(st, registry=reg)
+    metrics.absorb_iostats(st, registry=reg)
+    snap = reg.snapshot()
+    assert snap["bullion.io.preads"] == 6
+    assert snap["bullion.io.bytes_read"] == 1400
+    assert snap["bullion.io.metadata_seconds"] == 1.0
+    assert "bullion.io.wasted_bytes" not in snap    # zero fields stay absent
+
+
+def test_dataset_close_absorbs_iostats_into_registry(shard):
+    before = metrics.counter("bullion.io.preads").value
+    ds = dataset(shard)
+    ds.to_table()
+    st = ds.stats
+    ds.close()
+    assert st.preads > 0
+    assert metrics.counter("bullion.io.preads").value >= before + st.preads
+
+
+# ---------------------------------------------------------------------------
+# IOStats aggregation + benchmark CSV schema sync
+# ---------------------------------------------------------------------------
+
+def test_iostats_merge_sum_delta_cover_every_field():
+    ones = IOStats(**{f.name: 1 for f in dataclasses.fields(IOStats)})
+    twos = IOStats.sum([ones, ones])
+    for f in dataclasses.fields(IOStats):
+        assert getattr(twos, f.name) == 2, f.name
+    assert dataclasses.asdict(twos.delta(ones)) == dataclasses.asdict(ones)
+    three = IOStats(preads=1).merge(IOStats(preads=2))
+    assert three.preads == 3
+    assert IOStats.sum([]) == IOStats()
+
+
+def test_bench_csv_columns_match_iostats_fields():
+    """The run.py CSV schema must not drift from IOStats: every stat column
+    maps to a real field, in declared order."""
+    sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+    try:
+        from benchmarks.run import STAT_COLUMNS, STAT_FIELDS
+    finally:
+        sys.path.pop(0)
+    field_names = {f.name for f in dataclasses.fields(IOStats)}
+    assert STAT_COLUMNS == tuple(STAT_FIELDS)
+    for col, field in STAT_FIELDS.items():
+        assert field in field_names, \
+            f"CSV column {col!r} maps to unknown IOStats field {field!r}"
+
+
+# ---------------------------------------------------------------------------
+# explain(analyze=True) / profile() / trace export
+# ---------------------------------------------------------------------------
+
+def _parse_io_line(text):
+    (line,) = [ln for ln in text.splitlines() if ln.strip().startswith("io:")]
+    out = {}
+    for tok in line.split(":", 1)[1].split():
+        k, v = tok.split("=")
+        out[k] = float(v) if "." in v else int(v)
+    return out
+
+
+def test_explain_analyze_reconciles_with_iostats(shard):
+    ds = dataset(shard).where(C("id") >= 500)
+    before = ds.stats
+    text = ds.explain(analyze=True)
+    after = ds.stats
+    delta = after.delta(before)
+    got = _parse_io_line(text)
+    for f in dataclasses.fields(IOStats):
+        want = getattr(delta, f.name)
+        assert got[f.name] == pytest.approx(want, abs=1e-6), f.name
+    assert "Execution (analyze=True):" in text
+    assert "rows out: 500" in text
+    # per-stage lines show the traced pipeline
+    assert "exec.task" in text and "decode.decode" in text
+    ds.close()
+
+
+def test_explain_analyze_counts_pruning_on_fresh_instance(shard):
+    text = dataset(shard).where(C("id") < 100).explain(analyze=True)
+    assert "plan.lower" in text and "scan.plan" in text
+    got = _parse_io_line(text)
+    assert got["bytes_pruned"] > 0 and got["pages_pruned"] > 0
+
+
+def test_profile_writes_valid_chrome_trace(shard, tmp_path):
+    out = str(tmp_path / "trace.json")
+    ds = dataset(shard).select(["id"])
+    prof = ds.profile(out, parallelism=2, io_depth=2)
+    assert prof.spans and prof.dropped == 0
+    doc = json.load(open(out))
+    events = doc["traceEvents"]
+    assert all(e["ph"] in ("M", "X") for e in events)
+    x = [e for e in events if e["ph"] == "X"]
+    assert {e["name"] for e in x} >= {"exec.task", "decode.pread",
+                                      "decode.decode"}
+    for e in x:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        json.dumps(e["args"])           # args survived JSON coercion
+    # thread-name metadata for every tid that emitted events
+    named = {e["tid"] for e in events if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {e["tid"] for e in x} <= named
+    assert prof.aggregate()["exec.task"].count == 10
+    ds.close()
+
+
+def test_chrome_trace_coerces_numpy_args():
+    rec = trace.SpanRecord("s", "c", 0.0, 1e-3, 1, "t",
+                           {"n": np.int64(4), "f": np.float32(0.5),
+                            "s": "x", "o": object()})
+    doc = export.chrome_trace([rec], dropped=2)
+    args = doc["traceEvents"][-1]["args"]
+    assert args["n"] == 4 and args["f"] == 0.5 and args["s"] == "x"
+    assert isinstance(args["o"], str)
+    assert doc["bullionDroppedSpans"] == 2
+    json.dumps(doc)
+
+
+def test_bullion_trace_env_end_to_end(shard, tmp_path):
+    """BULLION_TRACE=path on a fresh interpreter writes a loadable Chrome
+    trace at exit covering a real scan."""
+    out = str(tmp_path / "env-trace.json")
+    code = (
+        "from repro.dataset import dataset\n"
+        f"ds = dataset({shard!r})\n"
+        "ds.to_table(io_depth=2)\n"
+        "ds.close()\n"
+    )
+    env = dict(os.environ, BULLION_TRACE=out,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(os.path.dirname(
+                       os.path.abspath(__file__))), "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                   timeout=120)
+    doc = json.load(open(out))
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"plan.optimize", "plan.lower", "exec.task"} <= names
+
+
+def test_trace_cap_env_rejects_garbage(monkeypatch):
+    monkeypatch.setenv("BULLION_TRACE_CAP", "lots")
+    with pytest.raises(ValueError, match="BULLION_TRACE_CAP"):
+        trace._default_cap()
+    monkeypatch.setenv("BULLION_TRACE_CAP", "64")
+    assert trace._default_cap() == 64
