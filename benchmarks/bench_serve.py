@@ -1,0 +1,112 @@
+"""Dataset-service benchmark: bloom-sketch point lookups + prepared plans.
+
+Two probes of the serving path:
+
+* **Point-lookup latency.** Equality probes on an *unclustered* id column,
+  where zone maps are useless (every group spans the full value range) and
+  the per-chunk bloom sketches carry the pruning. Reports us_per_call plus
+  the pruning evidence — ``groups_pruned_sketch`` and the data preads the
+  surviving probe actually issued — so a sketch regression (suddenly
+  scanning every group) shows up in the CSV immediately.
+* **Prepared-plan throughput.** The same query shape fired repeatedly at a
+  ``DatasetServer``: after the first miss every call hits the prepared-plan
+  LRU and skips optimize/lower, so the derived probes/sec tracks the
+  execution-only cost of a served point lookup.
+
+``BULLION_BENCH_SMOKE=1`` shrinks the dataset for CI smoke runs (same code
+path and CSV schema, smaller constants)."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BullionWriter, ColumnSpec
+from repro.dataset import clear_footer_cache, dataset
+from repro.scan import C
+from repro.serve import DatasetServer
+
+
+def _write_shards(d: str, n_shards: int, rows_per_shard: int,
+                  rows_per_group: int, page_rows: int) -> np.ndarray:
+    """Unclustered ids (a permutation of the full keyspace striped across
+    shards) + float payload. Returns the id column, concatenated."""
+    os.makedirs(d)
+    schema = [ColumnSpec("id", "int64"), ColumnSpec("val", "float32")]
+    rng = np.random.default_rng(7)
+    ids = rng.permutation(n_shards * rows_per_shard * 2)  # gaps => absences
+    all_ids = []
+    for s in range(n_shards):
+        part = ids[s * rows_per_shard:(s + 1) * rows_per_shard].astype(
+            np.int64)
+        all_ids.append(part)
+        w = BullionWriter(os.path.join(d, f"part-{s:04d}.bln"), schema,
+                          rows_per_group=rows_per_group, page_rows=page_rows)
+        w.write_table({"id": part,
+                       "val": rng.random(rows_per_shard).astype(np.float32)})
+        w.close()
+    return np.concatenate(all_ids)
+
+
+def run(report):
+    smoke = bool(os.environ.get("BULLION_BENCH_SMOKE"))
+    n_shards = 2 if smoke else 4
+    rows_per_group = 512 if smoke else 2048
+    groups_per_shard = 4 if smoke else 8
+    rows_per_shard = rows_per_group * groups_per_shard
+    page_rows = max(1, rows_per_group // 8)
+    n_probes = 16 if smoke else 64
+
+    with tempfile.TemporaryDirectory() as td:
+        d = os.path.join(td, "shards")
+        ids = _write_shards(d, n_shards, rows_per_shard, rows_per_group,
+                            page_rows)
+        rng = np.random.default_rng(11)
+        victims = rng.choice(ids, size=n_probes, replace=False)
+        n_groups = n_shards * groups_per_shard
+
+        # --- bloom-sketch point lookups (unclustered ids) -------------------
+        clear_footer_cache()
+        t0 = time.perf_counter()
+        with dataset(d) as ds:
+            for v in victims:
+                tbl = ds.where(C("id") == int(v)).to_table()
+                assert tbl["id"].tolist() == [int(v)]
+            st = ds.stats
+        dt = time.perf_counter() - t0
+        # without sketches every probe would decode all groups; the sketch
+        # path must refute most of them outright
+        assert st.groups_pruned_sketch > n_probes * (n_groups // 2), \
+            f"sketches pruned only {st.groups_pruned_sketch} groups " \
+            f"across {n_probes} probes of {n_groups} groups"
+        report("serve/bloom_point_lookup", dt / n_probes * 1e6,
+               f"{n_probes} probes, {st.groups_pruned_sketch} groups "
+               f"sketch-pruned of {n_probes * n_groups} examined, "
+               f"{st.preads} preads total",
+               preads=st.preads, bytes_read=st.bytes_read,
+               groups_pruned_sketch=st.groups_pruned_sketch,
+               pruned_bytes=st.bytes_pruned, pages_pruned=st.pages_pruned)
+
+        # --- prepared-plan repeated queries ---------------------------------
+        clear_footer_cache()
+        victim = int(victims[0])
+        with DatasetServer({"bench": d}, max_workers=2) as srv:
+            srv.query("bench", where=C("id") == victim)   # warm: cache miss
+            t0 = time.perf_counter()
+            for _ in range(n_probes):
+                res = srv.query("bench", where=C("id") == victim)
+                assert res.cache_hit and res.rows == 1
+            dt = time.perf_counter() - t0
+            stats = srv.stats()
+        assert stats["plan_cache"]["hits"] >= n_probes
+        io = stats["datasets"]["bench"]["io"]
+        report("serve/prepared_plan_probe", dt / n_probes * 1e6,
+               f"{n_probes / max(dt, 1e-9):.0f} probes/sec served, "
+               f"{stats['plan_cache']['hits']} plan-cache hits, "
+               f"{stats['plan_cache']['misses']} misses",
+               preads=io["preads"], bytes_read=io["bytes_read"],
+               groups_pruned_sketch=io["groups_pruned_sketch"],
+               footer_cache_hits=io["footer_cache_hits"])

@@ -18,8 +18,8 @@
 # Chrome trace_event JSON (open in Perfetto / chrome://tracing) covering
 # every instrumented stage the suites exercised;
 # ``BULLION_BENCH_SMOKE=1`` makes the suites that honor it (scan, compact,
-# bench_io) shrink their datasets — the CI smoke mode that keeps the
-# perf-trajectory CSV accumulating on every push.
+# bench_io, bench_serve) shrink their datasets — the CI smoke mode that
+# keeps the perf-trajectory CSV accumulating on every push.
 from __future__ import annotations
 
 import argparse
@@ -32,6 +32,7 @@ import traceback
 STAT_FIELDS = {
     "pruned_bytes": "bytes_pruned",
     "pages_pruned": "pages_pruned",
+    "groups_pruned_sketch": "groups_pruned_sketch",
     "preads": "preads",
     "bytes_read": "bytes_read",
     "footer_cache_hits": "footer_cache_hits",
@@ -45,7 +46,7 @@ def main(argv=None) -> None:
     from . import (bench_cascade, bench_compact, bench_deletion, bench_io,
                    bench_metadata, bench_multimodal, bench_projection,
                    bench_quantization, bench_roofline, bench_scan,
-                   bench_sparse_delta)
+                   bench_serve, bench_sparse_delta)
 
     ap = argparse.ArgumentParser(description="Bullion benchmark suites")
     ap.add_argument("--only", default=None,
@@ -77,6 +78,7 @@ def main(argv=None) -> None:
         ("scan      (zone maps / pushdown)", bench_scan),
         ("compact   (write_to sink / recluster)", bench_compact),
         ("io        (pipelined scheduler / footer cache)", bench_io),
+        ("serve     (dataset service / bloom probes)", bench_serve),
         ("roofline  (dry-run artifacts)", bench_roofline),
     ]
     if args.only:

@@ -2,8 +2,11 @@
 ``Dataset`` API, scale the same plan to a sharded directory (pipelining its
 I/O with ``io_depth=``), delete a user GDPR-style, audit the physical
 erasure, compact + recluster the file into a fresh sharded dataset with
-``Dataset.write_to``, then profile a scan with the observability layer
-(``explain(analyze=True)``, ``Dataset.profile``, the metrics registry).
+``Dataset.write_to``, profile a scan with the observability layer
+(``explain(analyze=True)``, ``Dataset.profile``, the metrics registry),
+then stand the shards up behind the multi-tenant dataset service
+(``repro.serve.DatasetServer``: prepared plans, admission control, and
+bloom-sketch point lookups on unclustered columns).
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -221,6 +224,44 @@ def main():
     io_counters = {k: v for k, v in snap.items()
                    if k.startswith("bullion.io.") and isinstance(v, (int, float))}
     print(f"process-wide metrics (retired IOStats): {io_counters}")
+
+    # --- serve: the feature-serving read pattern ----------------------------
+    # DatasetServer fronts the shards for many concurrent point probes:
+    # prepared plans are cached by (dataset, canonical fingerprint), all
+    # sessions share one parsed footer + one fd per shard, and per-tenant
+    # io_depth budgets bound a noisy tenant's concurrent preads.
+    from repro.serve import DatasetServer
+    with dataset(shard_dir) as ds:
+        uids = ds.select(["user_id"]).to_table()["user_id"]
+        probe_uid = int(uids[0])
+        # an id inside the stored [min, max] but absent from the table —
+        # zone maps admit every group holding its range, so only the
+        # write-time per-chunk bloom sketches (format v3) can refute them.
+        # This is the everyday serving miss: a churned / unknown user.
+        present = set(int(u) for u in uids)
+        missing_uid = next(v for v in range(int(uids.min()), int(uids.max()))
+                           if v not in present)
+    with DatasetServer({"ads": shard_dir}, max_workers=4) as srv:
+        res = srv.query("ads", where=C("user_id") == probe_uid,
+                        columns=["user_id", "ctr_7d"], tenant="ranker")
+        hit = srv.query("ads", where=C("user_id") == probe_uid,
+                        columns=["user_id", "ctr_7d"], tenant="ranker")
+        miss = srv.query("ads", where=C("user_id") == missing_uid,
+                         columns=["user_id", "ctr_7d"], tenant="ranker")
+        st = srv.stats()
+        io = st["datasets"]["ads"]["io"]
+        print(f"served point probe user {probe_uid}: {res.rows} row(s) in "
+              f"{res.wall_seconds * 1e3:.2f} ms (repeat: cache_hit="
+              f"{hit.cache_hit}, {hit.wall_seconds * 1e3:.2f} ms), plan "
+              f"cache {st['plan_cache']['hits']} hit(s) / "
+              f"{st['plan_cache']['misses']} miss(es)")
+        print(f"absent user {missing_uid}: {miss.rows} rows, "
+              f"{io['groups_pruned_sketch']} group(s) refuted by bloom "
+              "sketch without touching a data page")
+        print(srv.explain("ads", where=C("user_id") == missing_uid,
+                          columns=["user_id", "ctr_7d"]))
+        # the same server speaks AF_UNIX for out-of-process clients:
+        # srv.serve() -> socket path; repro.serve.ServeClient(path).query(...)
 
 
 if __name__ == "__main__":

@@ -272,6 +272,28 @@ def _rebuild_footer(fv: FooterView, dvs: dict[int, np.ndarray],
         fb.put(Sec.PAGE_STATS, pstats)
         fb.put(Sec.CHUNK_STATS, cstats)
 
+    # the same zeros must be admitted by the bloom value sketches: insert
+    # 0's key into every touched page/chunk sketch (in-place bit-OR — blob
+    # offsets never move), mirroring widen_to_zero above. Relocated pages
+    # only *remove* rows, so their old sketch stays a sound superset.
+    if touched_stats and fv.has_sketches:
+        from ..scan.sketch import BloomSketch, canonical_u64
+        data = bytearray(bytes(fv.raw(Sec.SKETCH_DATA)))
+        chunk_off = fv.arr(Sec.CHUNK_SKETCH, np.uint64)
+        pg_off = fv.arr(Sec.PAGE_SKETCH, np.uint64) \
+            if fv.has(Sec.PAGE_SKETCH) else None
+        zero = canonical_u64([0.0])
+        no_sketch = np.uint64(0xFFFFFFFFFFFFFFFF)
+        n_cols = fv.n_cols
+        for p, g, c in touched_stats:
+            offs = [chunk_off[g * n_cols + c]]
+            if pg_off is not None:
+                offs.append(pg_off[p])
+            for off in offs:
+                if off != no_sketch:
+                    BloomSketch.from_buffer(data, int(off)).insert(zero)
+        fb.put(Sec.SKETCH_DATA, bytes(data))
+
     n_pages = fv.n_pages
     dv_off = fv.arr(Sec.DV_OFFSET, np.uint64).copy()
     dv_size = fv.arr(Sec.DV_SIZE, np.uint32).copy()

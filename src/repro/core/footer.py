@@ -36,7 +36,8 @@ _TAIL = struct.Struct("<Q8s")
 FORMAT_V0 = 0             # seed format: no statistics sections
 FORMAT_V1 = 1             # + PAGE_STATS / CHUNK_STATS zone maps
 FORMAT_V2 = 2             # + CHUNK_PAGE_COUNT (multi-page chunks)
-FORMAT_VERSION = FORMAT_V2
+FORMAT_V3 = 3             # + CHUNK_SKETCH / PAGE_SKETCH bloom value sketches
+FORMAT_VERSION = FORMAT_V3
 
 
 class Sec(IntEnum):
@@ -64,6 +65,9 @@ class Sec(IntEnum):
     PAGE_STATS = 21       # STAT_DTYPE[n_pages] zone maps (v1+, see scan.stats)
     CHUNK_STATS = 22      # STAT_DTYPE[n_groups * n_cols] per-chunk zone maps (v1+)
     CHUNK_PAGE_COUNT = 23  # u32[n_groups * n_cols] pages per chunk (v2+; absent = 1)
+    CHUNK_SKETCH = 24     # u64[n_groups * n_cols] offset into SKETCH_DATA (v3+; u64max = none)
+    PAGE_SKETCH = 25      # u64[n_pages] offset into SKETCH_DATA (v3+; u64max = none)
+    SKETCH_DATA = 26      # self-describing bloom blobs (see scan.sketch)
 
 
 class PageType(IntEnum):
@@ -177,6 +181,29 @@ class FooterView:
             return None
         from ..scan.stats import STAT_DTYPE
         return self.arr(Sec.CHUNK_STATS, STAT_DTYPE)
+
+    # -- value sketches (v3+; absent on older files) ---------------------------
+    @property
+    def has_sketches(self) -> bool:
+        return self.has(Sec.CHUNK_SKETCH)
+
+    def _sketch_at(self, sid: Sec, idx: int):
+        if not self.has(sid):
+            return None
+        off = self.arr(sid, np.uint64)[idx]
+        if off == np.uint64(0xFFFFFFFFFFFFFFFF):
+            return None
+        from ..scan.sketch import BloomSketch
+        return BloomSketch.from_buffer(self.raw(Sec.SKETCH_DATA), int(off))
+
+    def chunk_sketch(self, group: int, col: int):
+        """BloomSketch over the chunk's distinct values, or None (no sketch
+        section, or this chunk skipped sketching). Absent = prune nothing."""
+        return self._sketch_at(Sec.CHUNK_SKETCH, group * self.n_cols + col)
+
+    def page_sketch(self, page: int):
+        """BloomSketch over one page's distinct values, or None."""
+        return self._sketch_at(Sec.PAGE_SKETCH, page)
 
     def column_index(self, name: str) -> int:
         """Binary map scan (paper's term): O(log n_cols), no parsing."""

@@ -68,6 +68,9 @@ class IOStats:
                               # bridged a gap between two wanted ranges
     footer_cache_hits: int = 0  # shard opens served from the process-wide
                                 # footer cache (no footer pread, no parse)
+    groups_pruned_sketch: int = 0  # row groups the zone maps admitted but a
+                                   # bloom value sketch refuted (point probes
+                                   # on unclustered columns)
 
     # -- aggregation (the one field-complete merge every consumer uses) -------
     def merge(self, other: "IOStats") -> "IOStats":

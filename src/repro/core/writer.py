@@ -116,6 +116,7 @@ class BullionWriter:
                  encode_ctx: Optional[EncodeContext] = None,
                  props: Optional[dict[str, str]] = None,
                  collect_stats: bool = True,
+                 collect_sketches: Optional[bool] = None,
                  stream: bool = False,
                  encoding_advisor: Optional[EncodingAdvisor] = None,
                  page_rows: Optional[int] = None):
@@ -159,6 +160,10 @@ class BullionWriter:
         # write-time zone-map statistics (scan subsystem). ``collect_stats=
         # False`` writes a v0 (stat-less) file — the backward-compat target.
         self.collect_stats = collect_stats
+        # bloom value sketches (v3) for unclustered equality probes; they
+        # ride the stats pipeline, so stat-less files are also sketch-less
+        self.collect_sketches = (collect_stats if collect_sketches is None
+                                 else bool(collect_sketches) and collect_stats)
         self.stream = stream
         self.encoding_advisor = encoding_advisor
         if stream and sort_udf is not None:
@@ -182,6 +187,9 @@ class BullionWriter:
         self._rows_per_group_arr: list[int] = []
         self._page_stat_recs: list = []              # physical page order
         self._chunk_stat_recs: dict[tuple[int, int], list] = {}
+        # canonical u64 sketch keys per physical page (None = unsketched:
+        # list/string column, or sketching disabled)
+        self._page_sketch_keys: list = []
         # page index per logical (group, col) chunk; with §2.5 layout
         # reordering a group's pages aren't in logical order.
         self._chunk_ranges: dict[tuple[int, int], tuple[int, int]] = {}
@@ -275,7 +283,7 @@ class BullionWriter:
             start_page = len(self._page_offset)
             for lo in bounds:
                 hi = min(lo + self.page_rows, n_rows)
-                blob, ptype, rec = self._build_page(spec, data[lo:hi])
+                blob, ptype, rec, skeys = self._build_page(spec, data[lo:hi])
                 self._page_offset.append(self._f.tell())
                 self._page_size.append(len(blob))
                 self._page_rows.append(hi - lo)
@@ -286,6 +294,8 @@ class BullionWriter:
                     self._page_stat_recs.append(rec)
                     self._chunk_stat_recs.setdefault(
                         (g, self._logical_idx[name]), []).append(rec)
+                if self.collect_sketches:
+                    self._page_sketch_keys.append(skeys)
             self._chunk_ranges[(g, self._logical_idx[name])] = \
                 (start_page, len(self._page_offset))
         self._group_page_start.append(len(self._page_offset))
@@ -356,8 +366,10 @@ class BullionWriter:
         # section presence), but must not claim v0 — one page per chunk —
         # for a file that actually carries multi-page chunks
         multi_page = any(e - s > 1 for s, e in self._chunk_ranges.values())
-        meta[7] = FORMAT_VERSION if self.collect_stats else \
-            (FORMAT_V2 if multi_page else FORMAT_V0)
+        if self.collect_stats:
+            meta[7] = FORMAT_VERSION if self.collect_sketches else FORMAT_V2
+        else:
+            meta[7] = FORMAT_V2 if multi_page else FORMAT_V0
         fb.put(Sec.META, meta)
 
         if self.collect_stats:
@@ -371,6 +383,41 @@ class BullionWriter:
                     recs[0] if len(recs) == 1 else merge_records(recs)
             fb.put(Sec.PAGE_STATS, page_stats)
             fb.put(Sec.CHUNK_STATS, chunk_stats)
+
+        if self.collect_sketches:
+            from ..scan.sketch import NO_SKETCH, BloomSketch
+            chunk_off = np.full(n_groups * n_cols, NO_SKETCH, np.uint64)
+            page_off = np.full(n_pages, NO_SKETCH, np.uint64)
+            blobs: list[bytes] = []
+            pos = 0
+            for (g, c), (s, e) in sorted(self._chunk_ranges.items()):
+                parts = [k for k in self._page_sketch_keys[s:e]
+                         if k is not None]
+                if len(parts) != e - s:
+                    continue       # unsketched column (list/string pages)
+                keys = parts[0] if len(parts) == 1 else \
+                    np.unique(np.concatenate(parts))
+                sk = BloomSketch.build(keys)
+                if sk is None:
+                    continue       # over the size cap: absent = no pruning
+                b = sk.to_bytes()
+                chunk_off[g * n_cols + c] = pos
+                blobs.append(b)
+                pos += len(b)
+                if e - s > 1:
+                    # per-page sketches only pay off when there is more than
+                    # one ordinal to choose between (mirrors _page_prune)
+                    for p in range(s, e):
+                        psk = BloomSketch.build(self._page_sketch_keys[p])
+                        if psk is None:
+                            continue
+                        pb = psk.to_bytes()
+                        page_off[p] = pos
+                        blobs.append(pb)
+                        pos += len(pb)
+            fb.put(Sec.CHUNK_SKETCH, chunk_off)
+            fb.put(Sec.PAGE_SKETCH, page_off)
+            fb.put(Sec.SKETCH_DATA, b"".join(blobs))
 
         names = [s.name for s in self.schema]
         name_bytes = b"".join(n.encode() for n in names)
@@ -448,6 +495,22 @@ class BullionWriter:
             return None
         return self._page_stats_record(spec, chunk, stored)
 
+    def _sketch_keys(self, spec: ColumnSpec, chunk, stored):
+        """Canonical u64 keys of one scalar/media_ref page, in the same
+        (dequantized) domain the zone maps describe. NaNs are dropped —
+        ``== NaN`` matches no row, so omitting them is sound."""
+        if not self.collect_sketches or \
+                spec.kind not in (ColKind.SCALAR, ColKind.MEDIA_REF):
+            return None
+        from ..scan.sketch import canonical_u64
+        if spec.kind == ColKind.SCALAR and spec.quant.mode != QuantMode.NONE:
+            vals = np.asarray(dequantize(stored, spec.quant))
+        else:
+            vals = np.asarray(chunk)
+        if vals.dtype.kind == "f":
+            vals = vals[~np.isnan(vals)]
+        return np.unique(canonical_u64(vals))
+
     def _ctx_for(self, rec, arr: np.ndarray) -> EncodeContext:
         """Stats-driven encoding choice hook: the advisor may restrict the
         cascade's candidate list from the chunk's min/max/distinct record.
@@ -465,25 +528,29 @@ class BullionWriter:
         return _dc_replace(self.ctx, candidates=advised)
 
     # -- page building -----------------------------------------------------------
-    def _build_page(self, spec: ColumnSpec, chunk) -> tuple[bytes, PageType, object]:
-        """Returns (payload, page type, stats record or None)."""
+    def _build_page(self, spec: ColumnSpec, chunk
+                    ) -> tuple[bytes, PageType, object, object]:
+        """Returns (payload, page type, stats record or None, sketch keys
+        or None)."""
         if spec.kind == ColKind.SCALAR:
             arr = np.asarray(chunk)
             if spec.quant.mode != QuantMode.NONE:
                 arr = quantize(arr, spec.quant)
             rec = self._stats_for(spec, chunk, arr)
             blob = pages.build_scalar_page(arr, self._ctx_for(rec, arr))
-            return blob, PageType.SCALAR, rec
+            return blob, PageType.SCALAR, rec, self._sketch_keys(
+                spec, chunk, arr)
         if spec.kind == ColKind.MEDIA_REF:
             arr = np.asarray(chunk, np.uint64)
             rec = self._stats_for(spec, chunk, arr)
             blob = pages.build_scalar_page(arr, self._ctx_for(rec, arr))
-            return blob, PageType.MEDIA_REF, rec
+            return blob, PageType.MEDIA_REF, rec, self._sketch_keys(
+                spec, chunk, arr)
         if spec.kind == ColKind.LIST:
             blob, ptype = pages.build_list_page(
                 list(chunk), self.ctx, use_sparse_delta=spec.sparse_delta)
-            return blob, ptype, self._stats_for(spec, chunk, None)
+            return blob, ptype, self._stats_for(spec, chunk, None), None
         if spec.kind == ColKind.STRING:
             return pages.build_string_page(list(chunk), self.ctx), \
-                PageType.STRING, self._stats_for(spec, chunk, None)
+                PageType.STRING, self._stats_for(spec, chunk, None), None
         raise ValueError(spec.kind)

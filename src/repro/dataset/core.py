@@ -225,7 +225,8 @@ class Dataset:
             f"  read columns (narrowed): {list(opt.read_columns)}",
             f"PhysicalPlan: {self.n_shards} shard(s), {len(phys.tasks)} task(s)",
             f"  groups: {phys.groups_total - phys.groups_pruned}/"
-            f"{phys.groups_total} kept ({phys.groups_pruned} pruned)",
+            f"{phys.groups_total} kept ({phys.groups_pruned} pruned, "
+            f"{phys.groups_pruned_sketch} by value sketch)",
             f"  pages: {phys.pages_total - phys.pages_pruned}/"
             f"{phys.pages_total} kept ({phys.pages_pruned} pruned, "
             f"{sum(1 for t in phys.tasks if t.pages is not None)} "
@@ -240,9 +241,11 @@ class Dataset:
         # One credit per Dataset instance (= one planned scan), however many
         # terminals observe it — tasks() + read_group() streaming and a
         # plain to_table() both count the avoided I/O exactly once.
-        if (phys.bytes_pruned or phys.pages_pruned) and not self._credited:
+        if (phys.bytes_pruned or phys.pages_pruned
+                or phys.groups_pruned_sketch) and not self._credited:
             self._credited = True
-            self._source.credit_pruned(phys.bytes_pruned, phys.pages_pruned)
+            self._source.credit_pruned(phys.bytes_pruned, phys.pages_pruned,
+                                       phys.groups_pruned_sketch)
 
     def _execute(self, output_columns: Optional[Sequence[str]] = None,
                  parallelism: int = 1, io_depth: int = 1

@@ -41,6 +41,36 @@ class LogicalPlan:
     def replace(self, **kw) -> "LogicalPlan":
         return replace(self, **kw)
 
+    def fingerprint(self) -> str:
+        """Stable content hash for prepared-plan caching.
+
+        Two plans that request the same scan get the same fingerprint even
+        when built differently: predicate conjunct/disjunct order is
+        normalized through ``canonical_repr``, so ``.where(a).where(b)``
+        and ``.where(b).where(a)`` collide (on purpose). Pinned row ids
+        hash by content. The hash is *not* persisted anywhere, so the
+        scheme may change freely between versions."""
+        import hashlib
+
+        from ..scan.predicate import canonical_repr
+        bits = [
+            "cols=" + ("*" if self.columns is None
+                       else ",".join(self.columns)),
+            "pred=" + canonical_repr(self.predicate),
+            "groups=" + ("-" if self.groups is None
+                         else ",".join(map(str, self.groups))),
+            f"dequant={self.dequantize}",
+            f"drop_deleted={self.drop_deleted}",
+            f"limit={self.limit}",
+            f"kernel={self.use_kernel}",
+            f"rows={self.row_ids is not None}",
+        ]
+        h = hashlib.sha256("\n".join(bits).encode())
+        if self.row_ids is not None:
+            h.update(np.ascontiguousarray(
+                np.asarray(self.row_ids, np.int64)).tobytes())
+        return h.hexdigest()
+
 
 @dataclass(frozen=True)
 class OptimizedPlan:
@@ -98,6 +128,7 @@ class PhysicalPlan:
     tasks: list[ScanTask] = field(default_factory=list)
     groups_total: int = 0
     groups_pruned: int = 0            # zone-map + row-locate + limit pruning
+    groups_pruned_sketch: int = 0     # of those, refuted by bloom sketches
     pages_total: int = 0
     pages_pruned: int = 0
     bytes_total: int = 0              # data bytes a naive full scan would read
@@ -213,6 +244,7 @@ def _lower(opt: OptimizedPlan, source: "DataSource") -> PhysicalPlan:
         phys.pages_total += scan_plan.pages_total
         phys.bytes_total += scan_plan.bytes_total
         phys.groups_pruned += len(scan_plan.pruned_groups)
+        phys.groups_pruned_sketch += scan_plan.groups_pruned_sketch
         phys.pages_pruned += scan_plan.pages_pruned
         phys.bytes_pruned += scan_plan.bytes_pruned
         groups = scan_plan.groups

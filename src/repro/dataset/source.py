@@ -265,16 +265,19 @@ class DataSource:
         """The shard whose footer defines the dataset schema (shard 0)."""
         return self.paths[0]
 
-    def credit_pruned(self, nbytes: int, npages: int = 0) -> None:
+    def credit_pruned(self, nbytes: int, npages: int = 0,
+                      sketch_groups: int = 0) -> None:
         """Account plan-proven avoided I/O without opening any reader.
         For a borrowed reader (legacy shims), the credit must land on the
         caller's IOStats — this source is discarded right after the call."""
         if not self.owns_readers:
             self._readers[0].stats.bytes_pruned += int(nbytes)
             self._readers[0].stats.pages_pruned += int(npages)
+            self._readers[0].stats.groups_pruned_sketch += int(sketch_groups)
         else:
             self._retire(IOStats(bytes_pruned=int(nbytes),
-                                 pages_pruned=int(npages)))
+                                 pages_pruned=int(npages),
+                                 groups_pruned_sketch=int(sketch_groups)))
 
     # -- lifecycle --------------------------------------------------------------
     def _retire(self, st: IOStats) -> None:

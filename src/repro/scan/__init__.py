@@ -31,16 +31,22 @@ Layout:
                   execution delegates to the unified ``repro.dataset``
                   pipeline (two-phase predicate-then-payload reads, Pallas
                   batch filter) — see ``repro.dataset.executor``
+  sketch.py     — per-chunk/per-page bloom value sketches (format v3,
+                  ``Sec.CHUNK_SKETCH``): metadata-resident refutation of
+                  equality probes on *unclustered* columns, where zone maps
+                  are useless
 """
 
-from .predicate import (And, C, Cmp, In, Not, Or, Predicate,
+from .predicate import (And, C, Cmp, In, Not, Or, Predicate, canonical_repr,
                         conjunctive_ranges, evaluate)
 from .scanner import ScanBatch, ScanPlan, Scanner, plan_scan
+from .sketch import BloomSketch, canonical_u64
 from .stats import (HAS_MINMAX, LIST_ELEMENTS, STAT_DTYPE, merge_records,
                     stats_record)
 
 __all__ = [
-    "And", "C", "Cmp", "In", "Not", "Or", "Predicate", "conjunctive_ranges",
-    "evaluate", "ScanBatch", "ScanPlan", "Scanner", "plan_scan", "HAS_MINMAX",
+    "And", "C", "Cmp", "In", "Not", "Or", "Predicate", "canonical_repr",
+    "conjunctive_ranges", "evaluate", "ScanBatch", "ScanPlan", "Scanner",
+    "plan_scan", "BloomSketch", "canonical_u64", "HAS_MINMAX",
     "LIST_ELEMENTS", "STAT_DTYPE", "merge_records", "stats_record",
 ]

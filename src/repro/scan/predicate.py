@@ -66,6 +66,17 @@ class Predicate:
     def always(self, stats: dict) -> bool:
         raise NotImplementedError
 
+    def sketch_refutes(self, sketches: dict) -> bool:
+        """Do the per-value sketches *prove* no row can match?
+
+        ``sketches`` maps column name -> an object with ``may_contain(v)``
+        (``scan.sketch.BloomSketch``). Only equality-shaped leaves can be
+        refuted; every other node conservatively answers False ("cannot
+        refute"), which keeps the test sound under arbitrary nesting —
+        ``Not`` in particular never refutes, because "value absent" says
+        nothing about the complement."""
+        return False
+
     def __and__(self, other: "Predicate") -> "Predicate":
         return And(self, other)
 
@@ -163,6 +174,12 @@ class Cmp(Predicate):
             return lo > v_hi
         return lo >= v_hi               # >=
 
+    def sketch_refutes(self, sketches: dict) -> bool:
+        if self.op != "==":
+            return False
+        sk = sketches.get(self.col)
+        return sk is not None and not sk.may_contain(self.value)
+
 
 @dataclass(frozen=True)
 class In(Predicate):
@@ -193,6 +210,13 @@ class In(Predicate):
 
     def always(self, stats: dict) -> bool:
         return False
+
+    def sketch_refutes(self, sketches: dict) -> bool:
+        sk = sketches.get(self.col)
+        if sk is None:
+            return False
+        # vacuously refuted when empty: ``IN {}`` matches no row
+        return all(not sk.may_contain(v) for v in self.values)
 
 
 class _NAry(Predicate):
@@ -231,6 +255,9 @@ class And(_NAry):
     def always(self, stats: dict) -> bool:
         return all(c.always(stats) for c in self.children)
 
+    def sketch_refutes(self, sketches: dict) -> bool:
+        return any(c.sketch_refutes(sketches) for c in self.children)
+
 
 class Or(_NAry):
     def mask(self, table: dict) -> np.ndarray:
@@ -244,6 +271,9 @@ class Or(_NAry):
 
     def always(self, stats: dict) -> bool:
         return any(c.always(stats) for c in self.children)
+
+    def sketch_refutes(self, sketches: dict) -> bool:
+        return all(c.sketch_refutes(sketches) for c in self.children)
 
 
 class Not(Predicate):
@@ -340,6 +370,24 @@ def conjunctive_ranges(pred: Predicate) -> Optional[dict[str, tuple[float, float
             lo = max(lo, v)
         out[leaf.col] = (lo, hi)
     return out
+
+
+def canonical_repr(pred: Optional[Predicate]) -> str:
+    """Order-insensitive textual form for plan fingerprinting.
+
+    ``And``/``Or`` are commutative and associative (the constructors already
+    flatten nesting), so their children are rendered sorted: chaining
+    ``.where(a).where(b)`` and ``.where(b).where(a)`` produce the same
+    canonical string. Leaves reuse their deterministic ``repr``."""
+    if pred is None:
+        return "-"
+    if isinstance(pred, (And, Or)):
+        word = f" {type(pred).__name__.upper()} "
+        return "(" + word.join(sorted(canonical_repr(c)
+                                      for c in pred.children)) + ")"
+    if isinstance(pred, Not):
+        return f"(NOT {canonical_repr(pred.child)})"
+    return repr(pred)
 
 
 def evaluate(pred: Predicate, table: dict) -> np.ndarray:

@@ -41,6 +41,7 @@ class ScanPlan:
 
     groups: list[int]                     # surviving row groups, in scan order
     pruned_groups: list[int]              # provably-empty row groups
+    groups_pruned_sketch: int = 0         # of those, refuted by value sketch
     pages_pruned: int = 0                 # page reads avoided by pruning
     pages_total: int = 0                  # page reads a full scan would issue
     bytes_pruned: int = 0                 # data bytes those pages hold
@@ -86,6 +87,16 @@ def _group_stats(fv, group: int, cols: Sequence[str]) -> dict:
             for name in cols}
 
 
+def _group_sketches(fv, group: int, cols: Sequence[str]) -> dict:
+    """Column name -> chunk BloomSketch, for columns that have one."""
+    out = {}
+    for name in cols:
+        sk = fv.chunk_sketch(group, fv.column_index(name))
+        if sk is not None:
+            out[name] = sk
+    return out
+
+
 def _pages_for(fv, group: int, cols: Sequence[str]) -> list[int]:
     out: list[int] = []
     for name in cols:
@@ -126,9 +137,19 @@ def _page_prune(fv, group: int, pred: Predicate, pred_cols: Sequence[str],
         return None, 0, 0
     surviving: list[int] = []
     pages_avoided = bytes_avoided = 0
+    page_sketches = fv.has(Sec.PAGE_SKETCH)
     for k in range(n_ord):
         stats = {name: page_stats[starts[name] + k] for name in pred_cols}
-        if pred.maybe_any(stats):
+        keep = pred.maybe_any(stats)
+        if keep and page_sketches:
+            sks = {}
+            for name in pred_cols:
+                sk = fv.page_sketch(starts[name] + k)
+                if sk is not None:
+                    sks[name] = sk
+            if sks and pred.sketch_refutes(sks):
+                keep = False
+        if keep:
             surviving.append(k)
         else:
             pages_avoided += len(read_cols)
@@ -151,6 +172,7 @@ def plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
         if sp.enabled:
             sp.set(groups_kept=len(plan.groups),
                    groups_pruned=len(plan.pruned_groups),
+                   groups_pruned_sketch=plan.groups_pruned_sketch,
                    pages_pruned=plan.pages_pruned,
                    bytes_pruned=plan.bytes_pruned)
     return plan
@@ -174,6 +196,15 @@ def _plan_scan(fv, pred: Optional[Predicate], columns: Sequence[str] = (),
         if pred is not None and \
                 not pred.maybe_any(_group_stats(fv, g, pred_cols)):
             plan.pruned_groups.append(g)
+            plan.pages_pruned += len(pages)
+            plan.bytes_pruned += nbytes
+            continue
+        if pred is not None and fv.has_sketches and \
+                pred.sketch_refutes(_group_sketches(fv, g, pred_cols)):
+            # the zone maps admitted the group (unclustered columns always
+            # do), but the bloom sketch proves the probed value absent
+            plan.pruned_groups.append(g)
+            plan.groups_pruned_sketch += 1
             plan.pages_pruned += len(pages)
             plan.bytes_pruned += nbytes
             continue
@@ -238,6 +269,7 @@ class Scanner:
         plan = self.plan(pred, columns, groups)
         self.reader.stats.bytes_pruned += plan.bytes_pruned
         self.reader.stats.pages_pruned += plan.pages_pruned
+        self.reader.stats.groups_pruned_sketch += plan.groups_pruned_sketch
         bounds = group_bounds(self.fv)
         for g in plan.groups:
             res = execute_group(self.reader, g, columns=columns,

@@ -1,3 +1,25 @@
-from .engine import ServeEngine
+"""Bullion serve: the multi-tenant dataset service (+ the LM serving demo).
 
-__all__ = ["ServeEngine"]
+The dataset service (``DatasetServer``/``ServeClient``) fronts Bullion
+datasets for feature-serving workloads: prepared-plan caching, shared
+footer/fd state, admission control with per-tenant io_depth budgets, and
+bloom-sketch point lookups. See ``serve.server``.
+
+The LM serving demo engine lives in ``serve.lm``; its ``ServeEngine`` is
+re-exported lazily so importing the dataset service never imports jax.
+"""
+
+from .client import ClientResult, ServeClient, ServeError
+from .server import DatasetServer, PlanCache, QueryResult, TenantBudget
+
+__all__ = [
+    "DatasetServer", "PlanCache", "QueryResult", "TenantBudget",
+    "ServeClient", "ClientResult", "ServeError", "ServeEngine",
+]
+
+
+def __getattr__(name: str):
+    if name == "ServeEngine":            # lazy: pulls in jax
+        from .lm import ServeEngine
+        return ServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,102 @@
+"""Client for the ``DatasetServer`` AF_UNIX front-end.
+
+One socket per client; requests on a connection are serialized (the
+protocol is strict request/response). Predicates are built with the normal
+``repro.scan.C`` combinators and serialized structurally::
+
+    with ServeClient(path) as cli:
+        res = cli.query("ads", where=C("id") == 12345,
+                        columns=["ctr", "bid"])
+        res.table["ctr"]        # numpy array, decoded
+
+Spin up several clients (or threads each owning one) for concurrency —
+the server is thread-per-session and all sessions share its bounded pool.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from ..scan.predicate import Predicate
+from . import wire
+
+
+class ServeError(RuntimeError):
+    """The server answered a request with ok=False."""
+
+
+@dataclass
+class ClientResult:
+    table: dict
+    rows: int
+    cache_hit: bool
+    fingerprint: str
+    wall_seconds: float
+
+
+class ServeClient:
+    def __init__(self, socket_path: str, *, timeout: Optional[float] = 30.0):
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.settimeout(timeout)
+        self._sock.connect(socket_path)
+        self._lock = threading.Lock()   # one in-flight request per socket
+
+    def _rpc(self, req: dict) -> dict:
+        with self._lock:
+            wire.send_msg(self._sock, req)
+            resp = wire.recv_msg(self._sock)
+        if resp is None:
+            raise ConnectionError("server closed the connection")
+        if not resp.get("ok"):
+            raise ServeError(resp.get("error", "unknown server error"))
+        return resp
+
+    def ping(self) -> bool:
+        return bool(self._rpc({"op": "ping"}).get("pong"))
+
+    def datasets(self) -> list[str]:
+        return self._rpc({"op": "datasets"})["datasets"]
+
+    def stats(self) -> dict:
+        return self._rpc({"op": "stats"})["stats"]
+
+    def explain(self, dataset: str, *,
+                columns: Optional[Sequence[str]] = None,
+                where: Optional[Predicate] = None,
+                head: Optional[int] = None) -> str:
+        return self._rpc({"op": "explain", "dataset": dataset,
+                          "columns": list(columns) if columns else None,
+                          "where": wire.encode_predicate(where),
+                          "head": head})["explain"]
+
+    def query(self, dataset: str, *,
+              columns: Optional[Sequence[str]] = None,
+              where: Optional[Predicate] = None,
+              head: Optional[int] = None,
+              tenant: str = "default",
+              io_depth: Optional[int] = None) -> ClientResult:
+        resp = self._rpc({"op": "query", "dataset": dataset,
+                          "columns": list(columns) if columns else None,
+                          "where": wire.encode_predicate(where),
+                          "head": head, "tenant": tenant,
+                          "io_depth": io_depth})
+        return ClientResult(table=wire.decode_table(resp["table"]),
+                            rows=resp["rows"],
+                            cache_hit=resp["cache_hit"],
+                            fingerprint=resp["fingerprint"],
+                            wall_seconds=resp["wall_seconds"])
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,336 @@
+"""Dataset service tests: plan fingerprints, prepared-plan cache, shared
+footer state, concurrent serving, tenant io_depth budgets, socket clients,
+and the lazy LM-engine re-export."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BullionWriter, ColumnSpec
+from repro.dataset import clear_footer_cache, dataset
+from repro.dataset.plan import LogicalPlan
+from repro.scan import C
+from repro.serve import DatasetServer, ServeClient, ServeError, TenantBudget
+
+N_ROWS = 4096
+N_SHARDS = 2
+
+
+@pytest.fixture
+def shards(tmp_path):
+    """Two shards, unclustered ids + payload + a string column."""
+    clear_footer_cache()
+    d = tmp_path / "shards"
+    d.mkdir()
+    rng = np.random.default_rng(42)
+    ids = rng.permutation(2 * N_ROWS)[:N_ROWS].astype(np.int64)
+    schema = [ColumnSpec("id", "int64"), ColumnSpec("val", "float32"),
+              ColumnSpec("tag", "string")]
+    per = N_ROWS // N_SHARDS
+    for s in range(N_SHARDS):
+        w = BullionWriter(str(d / f"part-{s:04d}.bln"), schema,
+                          rows_per_group=512, page_rows=128)
+        sl = slice(s * per, (s + 1) * per)
+        w.write_table({
+            "id": ids[sl],
+            "val": (ids[sl] * 2).astype(np.float32),
+            "tag": [b"tag-%d" % v for v in ids[sl]],
+        })
+        w.close()
+    return str(d), ids
+
+
+# ---------------------------------------------------------------------------
+# plan fingerprints (satellite: canonical, conjunct-order stable)
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_conjunct_order_invariant():
+    a, b = C("x") > 3, C("y") == 7
+    p1 = LogicalPlan(columns=("x", "y"), predicate=a & b)
+    p2 = LogicalPlan(columns=("x", "y"), predicate=b & a)
+    assert p1.fingerprint() == p2.fingerprint()
+    # Or children normalize too
+    p3 = LogicalPlan(predicate=(a | b) & (b | a))
+    p4 = LogicalPlan(predicate=(b | a) & (a | b))
+    assert p3.fingerprint() == p4.fingerprint()
+
+
+def test_fingerprint_distinguishes_plans():
+    base = LogicalPlan(columns=("x",), predicate=C("x") == 1)
+    assert base.fingerprint() != \
+        LogicalPlan(columns=("x",), predicate=C("x") == 2).fingerprint()
+    assert base.fingerprint() != \
+        LogicalPlan(columns=("y",), predicate=C("x") == 1).fingerprint()
+    assert base.fingerprint() != \
+        LogicalPlan(columns=("x",), predicate=C("x") == 1,
+                    limit=10).fingerprint()
+    assert LogicalPlan(predicate=None).fingerprint() != \
+        LogicalPlan(predicate=~(C("x") == 1)).fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# prepared-plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_repeat_query_hits_prepared_cache(shards):
+    d, ids = shards
+    victim = int(ids[100])
+    with DatasetServer({"t": d}) as srv:
+        r1 = srv.query("t", where=C("id") == victim, columns=["id", "val"])
+        r2 = srv.query("t", where=C("id") == victim, columns=["id", "val"])
+        assert not r1.cache_hit and r2.cache_hit
+        assert r1.fingerprint == r2.fingerprint
+        assert r1.table["id"].tolist() == r2.table["id"].tolist() == [victim]
+        st = srv.stats()
+        assert st["plan_cache"]["hits"] == 1
+        assert st["plan_cache"]["misses"] == 1
+        assert st["queries"] == 2 and st["errors"] == 0
+
+
+def test_conjunct_order_shares_cache_entry(shards):
+    d, ids = shards
+    victim = int(ids[7])
+    a, b = C("id") == victim, C("val") > -1.0
+    with DatasetServer({"t": d}) as srv:
+        r1 = srv.query("t", where=a & b)
+        r2 = srv.query("t", where=b & a)
+        assert r2.cache_hit and r1.fingerprint == r2.fingerprint
+        assert r1.table["id"].tolist() == r2.table["id"].tolist()
+
+
+def test_cache_lru_eviction(shards):
+    d, ids = shards
+    with DatasetServer({"t": d}, plan_cache_size=2) as srv:
+        for v in ids[:3]:
+            srv.query("t", where=C("id") == int(v))
+        st = srv.stats()["plan_cache"]
+        assert st["size"] == 2 and st["misses"] == 3
+        # oldest entry evicted: querying it again is a miss
+        r = srv.query("t", where=C("id") == int(ids[0]))
+        assert not r.cache_hit
+
+
+def test_explain_reports_prepared_state(shards):
+    d, ids = shards
+    with DatasetServer({"t": d}) as srv:
+        q = dict(columns=["id"], where=C("id") == int(ids[0]))
+        first = srv.explain("t", **q)
+        again = srv.explain("t", **q)
+        assert first.startswith("Prepared[t ") and " miss]" in \
+            first.splitlines()[0]
+        assert " hit]" in again.splitlines()[0]
+        assert "by value sketch" in first
+
+
+def test_unknown_dataset_raises(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        with pytest.raises(KeyError, match="unknown dataset"):
+            srv.query("nope")
+        with pytest.raises(ValueError, match="already attached"):
+            srv.attach("t", d)
+
+
+# ---------------------------------------------------------------------------
+# concurrent serving
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_mixed_workload_deterministic(shards):
+    d, ids = shards
+    victims = [int(v) for v in ids[::97][:8]]
+    # expected answers via the plain dataset API
+    with dataset(d) as ds:
+        want_probe = {v: ds.where(C("id") == v).to_table() for v in victims}
+        want_proj = ds.select(["id", "val"]).to_table()
+
+    with DatasetServer({"t": d}, max_workers=4) as srv:
+        results, errors = [], []
+
+        def worker(i):
+            try:
+                for j in range(6):
+                    if (i + j) % 3 == 0:
+                        r = srv.query("t", columns=["id", "val"],
+                                      tenant=f"tenant-{i % 2}")
+                        results.append(("proj", None, r))
+                    else:
+                        v = victims[(i * 7 + j) % len(victims)]
+                        r = srv.query("t", where=C("id") == v,
+                                      columns=["id", "val", "tag"],
+                                      tenant=f"tenant-{i % 2}")
+                        results.append(("probe", v, r))
+            except Exception as e:     # pragma: no cover - failure path
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        for kind, v, r in results:
+            if kind == "proj":
+                assert r.table["id"].tobytes() == want_proj["id"].tobytes()
+                assert r.table["val"].tobytes() == want_proj["val"].tobytes()
+            else:
+                assert r.table["id"].tolist() == \
+                    want_probe[v]["id"].tolist()
+                assert r.table["tag"] == [b"tag-%d" % v]
+        st = srv.stats()
+        assert st["errors"] == 0
+        assert st["plan_cache"]["hits"] > 0
+        # footers were parsed exactly once per shard and shared by every
+        # session: repeating a full query batch adds zero footer bytes
+        footer0 = st["datasets"]["t"]["io"]["footer_bytes"]
+        for v in victims:
+            srv.query("t", where=C("id") == v, columns=["id", "val", "tag"])
+        srv.query("t", columns=["id", "val"])
+        assert srv.stats()["datasets"]["t"]["io"]["footer_bytes"] == footer0
+
+
+def test_submit_is_async(shards):
+    d, ids = shards
+    with DatasetServer({"t": d}) as srv:
+        futs = [srv.submit("t", where=C("id") == int(v))
+                for v in ids[:4]]
+        rows = sorted(f.result(10).table["id"][0] for f in futs)
+        assert rows == sorted(int(v) for v in ids[:4])
+
+
+# ---------------------------------------------------------------------------
+# tenant io_depth budgets
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_budget_clamps_and_blocks():
+    b = TenantBudget(4)
+    assert b.acquire(100) == 4          # clamped to the budget, not rejected
+    b.release(4)
+    assert b.acquire(1) == 1
+    got = []
+
+    def blocked():
+        got.append(b.acquire(4))        # must wait for the release below
+        b.release(4)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    t.join(0.05)
+    assert t.is_alive() and not got     # still waiting
+    b.release(1)
+    t.join(5)
+    assert got == [4] and b.waits == 1
+    with pytest.raises(ValueError):
+        TenantBudget(0)
+
+
+def test_tenant_budget_bounds_concurrency_under_load(shards):
+    d, ids = shards
+    depth = 4
+    with DatasetServer({"t": d}, max_workers=8,
+                       tenant_io_depth=depth, default_io_depth=2) as srv:
+        # hold 3 of 4 permits so in-flight queries (wanting 2 each) must
+        # block on the budget — deterministic contention, however fast the
+        # probes themselves run
+        budget = srv.tenant_budget("noisy")
+        held = budget.acquire(3)
+        futs = [srv.submit("t", where=C("id") == int(v), tenant="noisy",
+                           io_depth=2)
+                for v in ids[:12]]
+        deadline = time.time() + 10
+        while budget.waits == 0 and time.time() < deadline:
+            time.sleep(0.005)
+        budget.release(held)
+        for f in futs:
+            f.result(30)
+        st = srv.stats()["tenants"]["noisy"]
+        assert st["io_depth"] == depth
+        assert st["peak_in_flight"] <= depth
+        assert st["waits"] > 0          # queries blocked on the held permits
+        # an isolated tenant has its own untouched budget
+        srv.query("t", where=C("id") == int(ids[0]), tenant="quiet")
+        assert srv.stats()["tenants"]["quiet"]["waits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# socket front-end
+# ---------------------------------------------------------------------------
+
+
+def test_socket_roundtrip_matches_inprocess(shards):
+    d, ids = shards
+    victim = int(ids[321])
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        with ServeClient(path) as cli:
+            assert cli.ping()
+            assert cli.datasets() == ["t"]
+            res = cli.query("t", where=C("id") == victim)
+            want = srv.query("t", where=C("id") == victim)
+            assert res.table["id"].tolist() == want.table["id"].tolist()
+            assert res.table["val"].tolist() == want.table["val"].tolist()
+            assert res.table["tag"] == [b"tag-%d" % victim]   # bytes rows
+            assert res.rows == 1 and res.fingerprint == want.fingerprint
+            assert "Prepared[t" in cli.explain("t",
+                                               where=C("id") == victim)
+            assert cli.stats()["queries"] >= 2
+            with pytest.raises(ServeError, match="unknown dataset"):
+                cli.query("nope")
+            # the error did not poison the session
+            assert cli.ping()
+
+
+def test_socket_concurrent_clients(shards):
+    d, ids = shards
+    victims = [int(v) for v in ids[:6]]
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        out, errors = {}, []
+
+        def client(v):
+            try:
+                with ServeClient(path) as cli:
+                    out[v] = cli.query(
+                        "t", where=C("id") == v).table["id"].tolist()
+            except Exception as e:     # pragma: no cover - failure path
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(v,))
+                   for v in victims]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert out == {v: [v] for v in victims}
+
+
+def test_server_close_idempotent(shards):
+    d, _ = shards
+    srv = DatasetServer({"t": d})
+    srv.serve()
+    srv.close()
+    srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit("t")
+
+
+# ---------------------------------------------------------------------------
+# LM engine re-export stays lazy
+# ---------------------------------------------------------------------------
+
+
+def test_serve_engine_reexport():
+    import repro.serve as serve
+    assert "ServeEngine" in serve.__all__
+    # the dataset service half imported above without pulling in the LM
+    # stack; the attribute itself resolves lazily from serve.lm
+    from repro.serve import ServeEngine
+    from repro.serve.lm import ServeEngine as Direct
+    assert ServeEngine is Direct

@@ -1,0 +1,271 @@
+"""Bloom value sketches: build/serialize roundtrip, soundness (no false
+negatives), format stamping (V3 sections, V0/V2 back-compat), group- and
+page-granular sketch pruning on unclustered ids, deletion widening."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import BullionWriter, ColumnSpec, delete_where
+from repro.core.footer import (FORMAT_V0, FORMAT_V2, FORMAT_V3,
+                               FORMAT_VERSION, Sec, read_footer)
+from repro.dataset import clear_footer_cache, dataset
+from repro.scan import C, BloomSketch, canonical_u64
+from repro.scan.sketch import NO_SKETCH
+
+# ---------------------------------------------------------------------------
+# the sketch itself
+# ---------------------------------------------------------------------------
+
+
+def test_build_roundtrip_no_false_negatives():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1 << 40, 3000)
+    sk = BloomSketch.build(canonical_u64(vals))
+    assert sk is not None
+    buf = sk.to_bytes()
+    sk2 = BloomSketch.from_buffer(buf, 0)
+    assert sk2.nbits == sk.nbits and sk2.n_hash == sk.n_hash
+    # soundness: every inserted value must be reported present, both sides
+    # of the serialization (may_contain canonicalizes raw literals itself)
+    for v in rng.choice(vals, 200, replace=False):
+        assert sk.may_contain(int(v))
+        assert sk2.may_contain(int(v))
+
+
+def test_false_positive_rate_sane():
+    rng = np.random.default_rng(1)
+    present = rng.permutation(1 << 20)[:4000]
+    sk = BloomSketch.build(canonical_u64(present))
+    absent = np.setdiff1d(np.arange(1 << 16), present)
+    fp = sum(sk.may_contain(int(v)) for v in absent[:2000])
+    # 8 bits/key, 4 hashes => ~2-3% theoretical FPR; allow generous slack
+    assert fp / 2000 < 0.10
+
+
+def test_empty_sketch_refutes_everything():
+    sk = BloomSketch.build(np.array([], dtype=np.uint64))
+    assert sk is not None
+    for v in (0, 1, -5, 3.25):
+        assert not sk.may_contain(v)
+
+
+def test_canonical_u64_folds_types_and_zero():
+    # int 5, float 5.0, np.int64(5) hash identically
+    a = canonical_u64(np.array([5], dtype=np.int64))
+    b = canonical_u64(np.array([5.0]))
+    c = canonical_u64(np.array([5], dtype=np.int32))
+    assert a[0] == b[0] == c[0]
+    # -0.0 folds onto +0.0 so `== 0` probes never miss a negative zero
+    z = canonical_u64(np.array([0.0, -0.0]))
+    assert z[0] == z[1]
+    sk = BloomSketch.build(canonical_u64(np.array([-0.0])))
+    assert sk.may_contain(0.0) and sk.may_contain(0)
+
+
+def test_oversized_build_returns_none():
+    # 8 bits/key: >128Ki distinct keys would blow the MAX_BITS cap
+    keys = np.arange(200_000, dtype=np.uint64)
+    assert BloomSketch.build(keys) is None
+
+
+# ---------------------------------------------------------------------------
+# format stamping + sections
+# ---------------------------------------------------------------------------
+
+SCHEMA = [ColumnSpec("id", "int64"), ColumnSpec("v", "float32")]
+
+
+def _write(path, *, n=4096, rows_per_group=1024, page_rows=256, seed=0,
+           **kw):
+    """Unclustered ids: a permutation slice, so every group spans the full
+    range (zone maps can't prune equality probes — only sketches can)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(2 * n)[:n].astype(np.int64)
+    w = BullionWriter(path, SCHEMA, rows_per_group=rows_per_group,
+                      page_rows=page_rows, **kw)
+    w.write_table({"id": ids, "v": rng.random(n).astype(np.float32)})
+    w.close()
+    return ids
+
+
+def test_default_writer_stamps_v3_with_sketch_sections(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path)
+    fv, _ = read_footer(path)
+    assert FORMAT_VERSION == FORMAT_V3
+    assert fv.format_version == FORMAT_V3
+    assert fv.has_sketches
+    for sid in (Sec.CHUNK_SKETCH, Sec.PAGE_SKETCH, Sec.SKETCH_DATA):
+        assert fv.has(sid)
+    # one chunk-sketch slot per (group, column); scalar columns populated
+    offs = np.frombuffer(fv.raw(Sec.CHUNK_SKETCH), dtype=np.uint64)
+    assert len(offs) == fv.n_groups * fv.n_cols
+    assert np.all(offs != NO_SKETCH)
+
+
+def test_sketches_opt_out_stamps_v2(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path, collect_sketches=False)
+    fv, _ = read_footer(path)
+    assert fv.format_version == FORMAT_V2
+    assert fv.has_stats and not fv.has_sketches
+    assert fv.chunk_sketch(0, 0) is None
+
+
+def test_statless_file_stays_v0(tmp_path):
+    path = str(tmp_path / "t.bln")
+    _write(path, collect_stats=False, page_rows=None)
+    fv, _ = read_footer(path)
+    assert fv.format_version == FORMAT_V0
+    assert not fv.has_stats and not fv.has_sketches
+
+
+def test_list_and_string_columns_unsketched(tmp_path):
+    path = str(tmp_path / "t.bln")
+    schema = SCHEMA + [ColumnSpec("seq", "list<int64>"),
+                       ColumnSpec("tag", "string")]
+    rng = np.random.default_rng(3)
+    n = 1024
+    w = BullionWriter(path, schema, rows_per_group=512, page_rows=128)
+    w.write_table({
+        "id": rng.permutation(2 * n)[:n].astype(np.int64),
+        "v": rng.random(n).astype(np.float32),
+        "seq": [rng.integers(0, 9, 3).astype(np.int64) for _ in range(n)],
+        "tag": [b"t%d" % (i % 7) for i in range(n)],
+    })
+    w.close()
+    fv, _ = read_footer(path)
+    assert fv.chunk_sketch(0, fv.column_index("id")) is not None
+    assert fv.chunk_sketch(0, fv.column_index("seq")) is None
+    assert fv.chunk_sketch(0, fv.column_index("tag")) is None
+
+
+# ---------------------------------------------------------------------------
+# pruning: the acceptance probe
+# ---------------------------------------------------------------------------
+
+
+def _mid_range_absent(ids, lo, hi):
+    present = set(int(v) for v in ids)
+    return next(v for v in range(lo, hi) if v not in present)
+
+
+def test_point_probe_reads_footer_plus_two_pages(tmp_path):
+    # acceptance: `C("id") == k` on an unclustered id column reads the
+    # footer + at most 2 data pages (the id page + the payload page)
+    clear_footer_cache()
+    path = str(tmp_path / "t.bln")
+    ids = _write(path, n=8192, rows_per_group=2048, page_rows=256)
+    victim = int(ids[5000])
+    with dataset(path) as ds:
+        q = ds.where(C("id") == victim)
+        tbl = q.to_table()
+        st = ds.stats
+        plan_text = q.explain()
+    assert tbl["id"].tolist() == [victim]
+    # 2 footer preads per shard; everything beyond is data pages
+    assert st.preads - 2 <= 2, \
+        f"point probe issued {st.preads} preads (footer is 2)"
+    assert st.groups_pruned_sketch >= 2
+    assert "by value sketch" in plan_text
+
+
+def test_absent_probe_reads_nothing(tmp_path):
+    clear_footer_cache()
+    path = str(tmp_path / "t.bln")
+    ids = _write(path, n=8192, rows_per_group=2048, page_rows=256)
+    # mid-range so zone maps pass and the sketches do the refuting
+    absent = _mid_range_absent(ids, 6000, 12000)
+    with dataset(path) as ds:
+        tbl = ds.where(C("id") == absent).to_table()
+        st = ds.stats
+    assert len(tbl["id"]) == 0
+    # every group refuted at plan time: no shard reader is even opened, so
+    # the query itself issues zero data preads
+    assert st.preads <= 2, "absent probe must not read data pages"
+    assert st.groups_pruned_sketch == 4
+
+
+def test_in_probe_uses_sketches(tmp_path):
+    clear_footer_cache()
+    path = str(tmp_path / "t.bln")
+    ids = _write(path, n=8192, rows_per_group=2048, page_rows=256)
+    a1 = _mid_range_absent(ids, 6000, 12000)
+    a2 = _mid_range_absent(ids, a1 + 1, 16000)
+    with dataset(path) as ds:
+        tbl = ds.where(C("id").isin([a1, a2])).to_table()
+        st = ds.stats
+    assert len(tbl["id"]) == 0
+    assert st.preads <= 2 and st.groups_pruned_sketch == 4
+
+
+def test_sketchless_files_scan_unchanged(tmp_path):
+    # v2-style (stats, no sketches) and v0 (nothing) files keep planning
+    # exactly as before: no sketch pruning, correct results
+    for kw, version in (({"collect_sketches": False}, FORMAT_V2),
+                        ({"collect_stats": False, "page_rows": None},
+                         FORMAT_V0)):
+        clear_footer_cache()
+        path = str(tmp_path / f"t{version}.bln")
+        ids = _write(path, **kw)
+        fv, _ = read_footer(path)
+        assert fv.format_version == version
+        victim = int(ids[123])
+        with dataset(path) as ds:
+            tbl = ds.where(C("id") == victim).to_table()
+            st = ds.stats
+        assert tbl["id"].tolist() == [victim]
+        assert st.groups_pruned_sketch == 0
+
+
+def test_quantized_column_sketches_dequantized_domain(tmp_path):
+    from repro.core import QuantMode, QuantSpec
+    path = str(tmp_path / "q.bln")
+    rng = np.random.default_rng(5)
+    n = 2048
+    vals = rng.permutation(n).astype(np.float32)
+    w = BullionWriter(
+        path,
+        [ColumnSpec("x", "float32", quant=QuantSpec(QuantMode.BF16))],
+        rows_per_group=512, page_rows=128)
+    w.write_table({"x": vals})
+    w.close()
+    with dataset(path) as ds:
+        # probe a value that survives quantization roundtrip on some row
+        got = ds.select(["x"]).to_table()["x"]
+    probe = float(got[100])
+    clear_footer_cache()
+    with dataset(path) as ds:
+        tbl = ds.where(C("x") == probe).to_table()
+    assert probe in tbl["x"].tolist(), \
+        "sketch over the dequantized domain must not refute stored values"
+
+
+def test_deletion_widens_sketches(tmp_path):
+    # an L2 delete masks rows to zero; the touched sketches must admit 0.0
+    # so raw-space `== 0` probes still find the masked rows
+    clear_footer_cache()
+    path = str(tmp_path / "d.bln")
+    rng = np.random.default_rng(9)
+    n = 4096
+    ids = rng.permutation(2 * n)[:n].astype(np.int64)
+    # values strictly positive so 0 is absent before the delete
+    vals = (rng.random(n).astype(np.float32) + 1.0)
+    w = BullionWriter(path, SCHEMA, rows_per_group=1024, page_rows=256)
+    w.write_table({"id": ids, "v": vals})
+    w.close()
+    victim = int(ids[10])
+    delete_where(path, C("id") == victim)
+    clear_footer_cache()
+    with dataset(path) as ds:
+        tbl = ds.drop_deleted(False).where(C("v") == 0).to_table()
+    assert len(tbl["v"]) >= 1 and np.all(tbl["v"] == 0.0)
+
+
+def test_groups_pruned_sketch_in_iostats_merge():
+    from repro.core.reader import IOStats
+    a = IOStats(groups_pruned_sketch=3)
+    b = IOStats(groups_pruned_sketch=4)
+    assert IOStats.sum([a, b]).groups_pruned_sketch == 7
