@@ -55,7 +55,18 @@ def main(argv=None) -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record spans across all suites and write one "
                          "merged Chrome trace_event JSON (Perfetto) to PATH")
+    ap.add_argument("--baseline", default=None, metavar="OUT.json",
+                    help="also write every probe's timing + stats as a "
+                         "machine-readable baseline JSON")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="diff this run against a recorded baseline; "
+                         "warn-only (CI trend signal, not a gate)")
+    ap.add_argument("--tolerance", type=float, default=35.0,
+                    help="--compare flags probes whose us_per_call moved "
+                         "more than this many percent (default 35)")
     args = ap.parse_args(argv)
+
+    results: dict[str, dict] = {}
 
     def report(name: str, value: float, derived: str = "", **stats) -> None:
         bad = set(stats) - set(STAT_COLUMNS)
@@ -64,6 +75,12 @@ def main(argv=None) -> None:
                             f"expected one of {list(STAT_COLUMNS)}")
         cells = ",".join("" if stats.get(c) is None else str(int(stats[c]))
                          for c in STAT_COLUMNS)
+        results[name] = {
+            "us_per_call": value,
+            "stats": {c: int(stats[c]) for c in STAT_COLUMNS
+                      if stats.get(c) is not None},
+            "derived": derived,
+        }
         print(f"{name},{value:.6g},{cells},{derived}", flush=True)
 
     print("name,us_per_call," + ",".join(STAT_COLUMNS) + ",derived")
@@ -114,8 +131,63 @@ def main(argv=None) -> None:
         write_trace(args.trace, tracer.spans, dropped=tracer.dropped)
         print(f"# trace: {args.trace} ({len(tracer.spans)} span(s), "
               f"{tracer.dropped} dropped)", flush=True)
+    if args.baseline:
+        _write_baseline(args.baseline, results)
+    if args.compare:
+        _compare_baseline(args.compare, results, args.tolerance)
     if failures:
         sys.exit(1)
+
+
+def _write_baseline(path: str, results: dict) -> None:
+    import json
+    import os
+    payload = {
+        "schema": 1,
+        "smoke": bool(os.environ.get("BULLION_BENCH_SMOKE")),
+        "stat_columns": list(STAT_COLUMNS),
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# baseline: {path} ({len(results)} probe(s))", flush=True)
+
+
+def _compare_baseline(path: str, results: dict, tolerance: float) -> None:
+    """Warn-only diff against a recorded baseline. Timings on shared CI
+    runners are noisy, so regressions print as ``# compare:`` commentary
+    for the perf-trajectory log rather than failing the run; the exact
+    I/O counters (preads, bytes, pruning) are the stable signal and get
+    flagged on ANY drift."""
+    import json
+    with open(path) as f:
+        base = json.load(f)
+    old = base.get("results", {})
+    flagged = 0
+    for name, rec in sorted(results.items()):
+        prev = old.get(name)
+        if prev is None:
+            print(f"# compare: {name}: new probe (no baseline)", flush=True)
+            continue
+        was, now = prev["us_per_call"], rec["us_per_call"]
+        if was > 0:
+            delta = (now - was) / was * 100.0
+            if abs(delta) > tolerance:
+                flagged += 1
+                print(f"# compare: {name}: us_per_call {was:.6g} -> "
+                      f"{now:.6g} ({delta:+.1f}%, tolerance "
+                      f"{tolerance:g}%)", flush=True)
+        for col, v in rec["stats"].items():
+            pv = prev.get("stats", {}).get(col)
+            if pv is not None and pv != v:
+                flagged += 1
+                print(f"# compare: {name}: {col} {pv} -> {v}", flush=True)
+    gone = sorted(set(old) - set(results))
+    for name in gone:
+        print(f"# compare: {name}: probe missing from this run", flush=True)
+    print(f"# compare: {len(results)} probe(s) vs {path}: "
+          f"{flagged} drift(s), {len(gone)} missing", flush=True)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,7 @@ the hot path):
 """
 
 import os
+import sys
 import tempfile
 
 import numpy as np
@@ -92,8 +93,11 @@ def write_shard(path, n, seed=0):
     return stats, raw
 
 
-def main():
-    td = tempfile.mkdtemp()
+def main(out_dir=None):
+    """``out_dir`` keeps the written datasets around (CI runs fsck over
+    them afterwards); default is a throwaway temp directory."""
+    td = out_dir if out_dir is not None else tempfile.mkdtemp()
+    os.makedirs(td, exist_ok=True)
     path = os.path.join(td, "ads.bln")
     n = 10_000
     stats, raw = write_shard(path, n)
@@ -263,6 +267,47 @@ def main():
         # the same server speaks AF_UNIX for out-of-process clients:
         # srv.serve() -> socket path; repro.serve.ServeClient(path).query(...)
 
+    # --- production telemetry: query log, wire traces, metrics, fsck --------
+    # Every served query leaves one structured QueryRecord (tenant, plan
+    # fingerprint, cache hit, stage timings, the exact IOStats delta).
+    # BULLION_QUERY_LOG=path mirrors records to a JSONL sink; BULLION_SLOW_MS
+    # promotes any query over the threshold to carry its full span tree
+    # (threshold 0 here so the demo always shows one). A traced ServeClient
+    # stamps its id into each request frame; the server's spans ride back on
+    # the response and profile() merges both sides into one Chrome trace.
+    from repro.obs.querylog import QueryLog
+    from repro.serve import ServeClient
+    with DatasetServer({"ads": shard_dir},
+                       query_log=QueryLog(slow_seconds=0.0)) as srv:
+        sock = srv.serve()
+        serve_trace = os.path.join(td, "serve-trace.json")
+        with ServeClient(sock, trace=True) as cli:
+            cli.query("ads", where=C("user_id") == probe_uid,
+                      columns=["user_id", "ctr_7d"])
+            cli.query("ads", columns=["device"], head=3)
+            prof = cli.profile(serve_trace)
+        rec = srv.query_log.records()[-1]
+        print(f"query log: {srv.query_log.summary()['total']} record(s); "
+              f"last: {rec!r}")
+        print(f"slow-query promotion: {len(rec.spans or [])} span(s) "
+              f"attached to the record (stages: {sorted(rec.stages)})")
+        print(f"merged client+server profile: {len(prof.spans)} span(s) "
+              f"under trace id {prof.trace_id} -> {serve_trace}")
+        queries_line = next(
+            ln for ln in srv.metrics_text().splitlines()
+            if ln.startswith("bullion_serve_queries"))
+        print(f"prometheus exposition ready to scrape: {queries_line!r} "
+              "(full text via srv.metrics_text() or the `metrics` wire op)")
+
+    # the bullion CLI reads it all back: `inspect` dumps a shard's anatomy,
+    # `fsck` re-verifies page checksums, Merkle bounds, deletion vectors,
+    # zone maps and sketches (exit 0 = clean, 1 = corruption)
+    from repro import cli as bullion_cli
+    rc = bullion_cli.main(["fsck", "-v", path, shard_dir, compact_dir])
+    assert rc == 0, "fsck found corruption in freshly written datasets"
+    print("bullion fsck: every page checksum, Merkle bound, deletion "
+          "vector, zone map and sketch verified (exit 0)")
+
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

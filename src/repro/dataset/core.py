@@ -19,6 +19,7 @@ import numpy as np
 
 from ..core.footer import ColKind, Sec
 from ..core.reader import BullionReader, IOStats
+from ..obs import querylog as _querylog
 from ..obs import trace as _trace
 from ..scan.predicate import Predicate
 from . import executor
@@ -207,6 +208,10 @@ class Dataset:
             bits.append(f"{f.name}={v:.6f}" if isinstance(v, float)
                         else f"{f.name}={v}")
         lines.append("  io: " + " ".join(bits))
+        # a capped tracer silently truncates; say so instead of looking
+        # complete
+        lines.append(f"  spans: {len(tracer.spans)} recorded, "
+                     f"{tracer.dropped} dropped")
         return "\n".join(lines)
 
     def _explain_static(self) -> str:
@@ -250,6 +255,63 @@ class Dataset:
     def _execute(self, output_columns: Optional[Sequence[str]] = None,
                  parallelism: int = 1, io_depth: int = 1
                  ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
+        """Run the plan (see ``_execute_impl``). When local query-log
+        recording is on (``BULLION_QUERY_LOG=path`` or
+        ``querylog.enable_local()``), the run is wrapped so one structured
+        record — wall time, rows, exact ``IOStats`` delta, stage timings if
+        a tracer is live — lands in ``querylog.LOG`` when the iterator
+        finishes (or dies); the default leaves the hot path untouched."""
+        inner = self._execute_impl(output_columns, parallelism, io_depth)
+        if not _querylog.local_enabled():
+            return inner
+        return self._execute_logged(inner, io_depth)
+
+    def _execute_logged(self, inner, io_depth: int
+                        ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
+        rec = _querylog.QueryRecord(
+            ts=_querylog.now(), origin="local",
+            dataset=self._source.paths[0], tenant="local",
+            columns=list(self._plan.columns)
+            if self._plan.columns is not None else None,
+            predicate=repr(self._plan.predicate)
+            if self._plan.predicate is not None else None)
+        try:
+            rec.fingerprint = self._plan.fingerprint()
+        except Exception:
+            pass
+        t0 = time.perf_counter()
+        before = self._source.stats
+        scope = tracer = None
+        if _trace.enabled():
+            scope = _trace.collect()
+            tracer = scope.__enter__()
+        try:
+            for task, res in inner:
+                rec.rows += len(res.row_ids)
+                rec.result_bytes += executor.table_nbytes(res.table)
+                yield task, res
+        except BaseException as e:
+            if not isinstance(e, GeneratorExit):
+                rec.outcome = "error"
+                rec.error = f"{type(e).__name__}: {e}"
+            raise
+        finally:
+            if scope is not None:
+                scope.__exit__(None, None, None)
+            rec.wall_seconds = time.perf_counter() - t0
+            rec.io = dataclasses.asdict(self._source.stats.delta(before))
+            if tracer is not None:
+                rec.stages = _querylog.stage_dict(tracer.aggregate())
+                rec.dropped_spans = tracer.dropped
+                if (_querylog.LOG.slow_seconds is not None
+                        and rec.wall_seconds >= _querylog.LOG.slow_seconds):
+                    rec.spans = [_trace.span_to_dict(s, wall=True)
+                                 for s in tracer.spans]
+            _querylog.LOG.append(rec)
+
+    def _execute_impl(self, output_columns: Optional[Sequence[str]] = None,
+                      parallelism: int = 1, io_depth: int = 1
+                      ) -> Iterator[tuple[ScanTask, executor.GroupResult]]:
         """Run the plan; ``output_columns`` overrides materialization for
         data-free terminals (row_ids/count) without spawning a new instance
         (caches and the pruned-bytes credit stay shared). ``parallelism > 1``

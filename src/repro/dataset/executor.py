@@ -45,6 +45,21 @@ class GroupResult:
 # ---------------------------------------------------------------------------
 
 
+def table_nbytes(table: dict) -> int:
+    """Payload bytes of a result table: array ``nbytes`` plus per-row bytes
+    for list/string columns. The query log's byte accounting — what a
+    terminal handed back, not what the wire encoding costs."""
+    total = 0
+    for col in table.values():
+        nbytes = getattr(col, "nbytes", None)
+        if nbytes is not None:
+            total += int(nbytes)
+        else:
+            for row in col:
+                total += int(getattr(row, "nbytes", None) or len(row))
+    return total
+
+
 def _chunk_page_ids(fv, group: int, col: int,
                     pages: Optional[Sequence[int]]) -> list[int]:
     """Physical page indices of one chunk, restricted to the page-ordinal

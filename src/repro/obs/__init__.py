@@ -16,7 +16,14 @@ included — may depend on it without cycles):
   reader accounting retires; timing histograms follow ``trace.enabled()``.
 * ``export`` — Chrome ``trace_event`` rendering (``chrome_trace`` /
   ``write_trace``) viewable in Perfetto, plus the ``Profile`` object
-  ``Dataset.profile()`` returns.
+  ``Dataset.profile()`` / ``ServeClient.profile()`` return.
+* ``querylog`` — thread-safe bounded ``QueryLog`` of structured per-query
+  records (tenant, fingerprint, stage timings, exact ``IOStats`` delta,
+  outcome), fed by the serve path and — under ``BULLION_QUERY_LOG=path``
+  (JSONL sink) — by local ``Dataset`` terminals; ``BULLION_SLOW_MS``
+  promotes slow queries' full span lists into their records.
+* ``expose`` — the registry snapshot rendered as Prometheus text format
+  (``DatasetServer.metrics_text()`` / the ``metrics`` wire command).
 
 Entry points most callers want::
 
@@ -28,21 +35,27 @@ Entry points most callers want::
     print(metrics.snapshot())            # process-wide counters/histograms
 """
 
-from . import metrics, trace
+from . import expose, metrics, querylog, trace
 from .export import Profile, chrome_trace, write_trace
+from .expose import parse_prometheus_text, prometheus_text
 from .metrics import (Counter, Histogram, MetricsRegistry, REGISTRY,
                       absorb_iostats, counter, histogram, snapshot)
-from .trace import (NULL_SPAN, Span, SpanRecord, StageAgg, Tracer, collect,
-                    disable, enable, enabled, install, span, traced)
+from .querylog import QueryLog, QueryRecord
+from .trace import (NULL_SPAN, Span, SpanRecord, StageAgg, Tracer,
+                    aggregate_spans, collect, disable, enable, enabled,
+                    install, span, span_from_dict, span_to_dict, traced)
 
 # honor BULLION_TRACE=path as soon as the first instrumented module loads
 trace.init_from_env()
 
 __all__ = [
-    "trace", "metrics",
+    "trace", "metrics", "querylog", "expose",
     "Span", "SpanRecord", "StageAgg", "Tracer", "NULL_SPAN",
     "span", "collect", "traced", "enable", "disable", "enabled", "install",
+    "span_to_dict", "span_from_dict", "aggregate_spans",
     "Counter", "Histogram", "MetricsRegistry", "REGISTRY",
     "counter", "histogram", "snapshot", "absorb_iostats",
+    "QueryLog", "QueryRecord",
+    "prometheus_text", "parse_prometheus_text",
     "Profile", "chrome_trace", "write_trace",
 ]

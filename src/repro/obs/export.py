@@ -33,8 +33,10 @@ def _json_safe(v):
 
 
 def chrome_trace(spans: Sequence[SpanRecord], *, pid: Optional[int] = None,
-                 dropped: int = 0) -> dict:
-    """Render finished spans as a Chrome trace_event JSON object."""
+                 dropped: int = 0, trace_id: Optional[str] = None) -> dict:
+    """Render finished spans as a Chrome trace_event JSON object.
+    ``trace_id`` stamps the wire-propagated id on the document (the
+    merged client+server profile carries exactly one)."""
     pid = os.getpid() if pid is None else pid
     events: list[dict] = [{
         "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
@@ -56,13 +58,15 @@ def chrome_trace(spans: Sequence[SpanRecord], *, pid: Optional[int] = None,
     out = {"traceEvents": events, "displayTimeUnit": "ms"}
     if dropped:
         out["bullionDroppedSpans"] = int(dropped)
+    if trace_id is not None:
+        out["bullionTraceId"] = trace_id
     return out
 
 
 def write_trace(path: str, spans: Sequence[SpanRecord], *,
-                dropped: int = 0) -> str:
+                dropped: int = 0, trace_id: Optional[str] = None) -> str:
     """Write ``spans`` as one Chrome trace JSON file; returns ``path``."""
-    doc = chrome_trace(spans, dropped=dropped)
+    doc = chrome_trace(spans, dropped=dropped, trace_id=trace_id)
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump(doc, f)
@@ -71,23 +75,37 @@ def write_trace(path: str, spans: Sequence[SpanRecord], *,
 
 
 class Profile:
-    """What ``Dataset.profile()`` returns: the collected spans plus the
-    rendered Chrome trace, with a one-call file export."""
+    """What ``Dataset.profile()`` / ``ServeClient.profile()`` return: the
+    collected spans plus the rendered Chrome trace, with a one-call file
+    export."""
 
-    def __init__(self, tracer: Tracer):
-        self.spans = list(tracer.spans)
-        self.dropped = tracer.dropped
-        self._tracer = tracer
+    def __init__(self, tracer: Optional[Tracer] = None, *,
+                 spans: Optional[Sequence[SpanRecord]] = None,
+                 dropped: int = 0, trace_id: Optional[str] = None):
+        self.spans = list(tracer.spans if tracer is not None
+                          else (spans or []))
+        self.dropped = (tracer.dropped if tracer is not None else 0) + dropped
+        self.trace_id = trace_id
+
+    @classmethod
+    def from_spans(cls, spans: Sequence[SpanRecord], *, dropped: int = 0,
+                   trace_id: Optional[str] = None) -> "Profile":
+        """Build a profile from a bare span list (e.g. client + server
+        spans merged after wire propagation)."""
+        return cls(spans=spans, dropped=dropped, trace_id=trace_id)
 
     @property
     def chrome(self) -> dict:
-        return chrome_trace(self.spans, dropped=self.dropped)
+        return chrome_trace(self.spans, dropped=self.dropped,
+                            trace_id=self.trace_id)
 
     def aggregate(self):
-        return self._tracer.aggregate()
+        from .trace import aggregate_spans
+        return aggregate_spans(self.spans)
 
     def write(self, path: str) -> str:
-        return write_trace(path, self.spans, dropped=self.dropped)
+        return write_trace(path, self.spans, dropped=self.dropped,
+                           trace_id=self.trace_id)
 
     def __repr__(self) -> str:
         return f"Profile({len(self.spans)} span(s), dropped={self.dropped})"

@@ -36,8 +36,12 @@ import time
 from typing import Callable, Optional
 
 # all trace timestamps are seconds relative to this module's load instant —
-# a monotonic zero shared by every thread in the process
+# a monotonic zero shared by every thread in the process. The wall-clock
+# instant of the same zero lets two processes exchange spans on a shared
+# (wall) timebase: rel -> wall is `ts + _EPOCH_WALL`, wall -> rel is
+# `ts - _EPOCH_WALL` in the receiving process.
 _EPOCH = time.perf_counter()
+_EPOCH_WALL = time.time()
 
 _DEFAULT_CAP = 200_000
 
@@ -75,6 +79,42 @@ class SpanRecord:
     def __repr__(self) -> str:
         return (f"SpanRecord({self.name!r}, dur={self.dur * 1e3:.3f}ms, "
                 f"args={self.args})")
+
+
+def _arg_safe(v):
+    """JSON-able coercion for span args (numpy scalars included) without
+    importing numpy — same contract as the exporter's coercion."""
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    for cast in (int, float):
+        try:
+            c = cast(v)
+        except (TypeError, ValueError):
+            continue
+        if c == v:
+            return c
+    return str(v)
+
+
+def span_to_dict(rec: SpanRecord, *, wall: bool = False) -> dict:
+    """JSON-able dict form of a finished span (the wire / query-log
+    representation). ``wall=True`` converts the timestamp to wall-clock
+    epoch seconds so a peer process can rebase it into its own timebase."""
+    return {"name": rec.name, "cat": rec.cat,
+            "ts": rec.ts + _EPOCH_WALL if wall else rec.ts,
+            "dur": rec.dur, "tid": rec.tid, "tname": rec.tname,
+            "args": {k: _arg_safe(v) for k, v in rec.args.items()}}
+
+
+def span_from_dict(d: dict, *, wall: bool = False) -> SpanRecord:
+    """Inverse of ``span_to_dict``; with ``wall=True`` the incoming
+    timestamp is wall-clock and is rebased to this process's epoch."""
+    ts = float(d["ts"])
+    if wall:
+        ts -= _EPOCH_WALL
+    return SpanRecord(d["name"], d.get("cat", "bullion"), ts,
+                      float(d["dur"]), int(d.get("tid", 0)),
+                      d.get("tname", ""), dict(d.get("args") or {}))
 
 
 class _NullSpan:
@@ -193,18 +233,24 @@ class Tracer:
         the totals are CPU-side time across threads."""
         with self._lock:
             spans = list(self.spans)
-        out: dict[str, StageAgg] = {}
-        for s in spans:
-            agg = out.get(s.name)
-            if agg is None:
-                agg = out[s.name] = StageAgg()
-            agg.count += 1
-            agg.seconds += s.dur
-            for k, v in s.args.items():
-                if isinstance(v, bool) or not isinstance(v, (int, float)):
-                    continue
-                agg.args[k] = agg.args.get(k, 0) + v
-        return out
+        return aggregate_spans(spans)
+
+
+def aggregate_spans(spans) -> dict[str, StageAgg]:
+    """Per-name totals over any span sequence (list or ``Tracer.spans``
+    snapshot): count, summed seconds, summed numeric args."""
+    out: dict[str, StageAgg] = {}
+    for s in spans:
+        agg = out.get(s.name)
+        if agg is None:
+            agg = out[s.name] = StageAgg()
+        agg.count += 1
+        agg.seconds += s.dur
+        for k, v in s.args.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            agg.args[k] = agg.args.get(k, 0) + v
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ for the repeated-identical-plan case, which is asserted in tests.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import socket
 import tempfile
@@ -42,15 +43,24 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+from ..dataset import executor
 from ..dataset.core import Dataset
 from ..dataset.plan import LogicalPlan
 from ..dataset.source import DataSource, PathSpec, discover
 from ..obs import metrics as _metrics
+from ..obs import querylog as _querylog
 from ..obs import trace as _trace
+from ..obs.expose import prometheus_text
 from ..scan.predicate import Predicate
 from . import wire
 
 DEFAULT_TENANT = "default"
+
+
+def _table_rows(table: dict) -> int:
+    for col in table.values():
+        return len(col)
+    return 0
 
 
 @dataclass
@@ -61,6 +71,8 @@ class QueryResult:
     fingerprint: str
     wall_seconds: float
     tenant: str = DEFAULT_TENANT
+    trace_id: Optional[str] = None
+    spans: Optional[list] = None  # wall-ts span dicts (wire trace requests)
 
 
 @dataclass
@@ -167,8 +179,14 @@ class DatasetServer:
 
     def __init__(self, datasets: Optional[dict[str, PathSpec]] = None, *,
                  max_workers: int = 4, plan_cache_size: int = 64,
-                 tenant_io_depth: int = 8, default_io_depth: int = 2):
+                 tenant_io_depth: int = 8, default_io_depth: int = 2,
+                 query_log: Optional[_querylog.QueryLog] = None,
+                 query_log_size: int = 256):
         self._sources: dict[str, DataSource] = {}
+        # the flight recorder: every query/submit appends one record (env
+        # knobs BULLION_QUERY_LOG / BULLION_SLOW_MS are read here)
+        self.query_log = _querylog.QueryLog(query_log_size) \
+            if query_log is None else query_log
         self._cache = PlanCache(plan_cache_size)
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers, thread_name_prefix="bullion-serve")
@@ -252,10 +270,16 @@ class DatasetServer:
                where: Optional[Predicate] = None,
                head: Optional[int] = None,
                tenant: str = DEFAULT_TENANT,
-               io_depth: Optional[int] = None) -> "Future[QueryResult]":
+               io_depth: Optional[int] = None,
+               trace_id: Optional[str] = None,
+               collect_spans: bool = False) -> "Future[QueryResult]":
         """Queue a query on the bounded pool and return its Future.
         Admission control happens here: the pool caps concurrent
-        executions, and the submit-time queue depth is recorded."""
+        executions, and the submit-time queue depth is recorded.
+        ``trace_id`` tags the query's spans and its query-log record;
+        ``collect_spans=True`` additionally runs the query under a scoped
+        tracer and returns the finished spans on the result (what the wire
+        front-end uses for client-side ``profile()``)."""
         if self._closed:
             raise RuntimeError("server is closed")
         with self._lock:
@@ -263,7 +287,7 @@ class DatasetServer:
             depth = self._pending
         _metrics.histogram("bullion.serve.queue_depth").observe(depth)
         fut = self._pool.submit(self._run, dataset, columns, where, head,
-                                tenant, io_depth)
+                                tenant, io_depth, trace_id, collect_spans)
         fut.add_done_callback(self._done)
         return fut
 
@@ -273,10 +297,14 @@ class DatasetServer:
               head: Optional[int] = None,
               tenant: str = DEFAULT_TENANT,
               io_depth: Optional[int] = None,
-              timeout: Optional[float] = None) -> QueryResult:
+              timeout: Optional[float] = None,
+              trace_id: Optional[str] = None,
+              collect_spans: bool = False) -> QueryResult:
         """Blocking query: submit + wait."""
         return self.submit(dataset, columns=columns, where=where, head=head,
-                           tenant=tenant, io_depth=io_depth).result(timeout)
+                           tenant=tenant, io_depth=io_depth,
+                           trace_id=trace_id,
+                           collect_spans=collect_spans).result(timeout)
 
     def _done(self, fut: Future) -> None:
         with self._lock:
@@ -284,35 +312,91 @@ class DatasetServer:
             if fut.exception() is not None:
                 self._errors += 1
 
-    def _run(self, dataset: str, columns, where, head, tenant: str,
-             io_depth: Optional[int]) -> QueryResult:
-        t0 = time.perf_counter()
-        ds, fp, hit = self.prepare(dataset, columns=columns, where=where,
-                                   head=head)
-        budget = self.tenant_budget(tenant)
-        want = self.default_io_depth if io_depth is None else io_depth
-        held = budget.acquire(want)
+    def _record(self, rec: _querylog.QueryRecord) -> None:
         try:
-            with _trace.span("serve.query", cat="serve", dataset=dataset,
-                             tenant=tenant, cache_hit=hit):
-                table = ds.to_table(io_depth=held)
+            self.query_log.append(rec)
+        except Exception:        # telemetry must never fail a query
+            pass
+
+    def _run(self, dataset: str, columns, where, head, tenant: str,
+             io_depth: Optional[int], trace_id: Optional[str] = None,
+             collect_spans: bool = False) -> QueryResult:
+        t0 = time.perf_counter()
+        rec = _querylog.QueryRecord(
+            ts=time.time(), origin="serve", dataset=dataset, tenant=tenant,
+            columns=list(columns) if columns is not None else None,
+            predicate=repr(where) if where is not None else None,
+            trace_id=trace_id)
+        # the scoped tracer costs span allocations, so it runs only when a
+        # caller asked for spans, a slow-query threshold is armed, or a
+        # process-wide recording is already on — the default serve hot path
+        # stays span-allocation-free (asserted in tests)
+        want_spans = (collect_spans or _trace.enabled()
+                      or self.query_log.slow_seconds is not None)
+        scope = tracer = None
+        held = 0
+        budget = None
+        try:
+            ds, fp, hit = self.prepare(dataset, columns=columns, where=where,
+                                       head=head)
+            rec.fingerprint, rec.cache_hit = fp, hit
+            source = self._sources[dataset]
+            budget = self.tenant_budget(tenant)
+            want = self.default_io_depth if io_depth is None else io_depth
+            held = budget.acquire(want)
+            if want_spans:
+                scope = _trace.collect()
+                tracer = scope.__enter__()
+            try:
+                before = source.stats
+                sp = _trace.span("serve.query", cat="serve", dataset=dataset,
+                                 tenant=tenant, cache_hit=hit)
+                if trace_id is not None and sp.enabled:
+                    sp.set(trace_id=trace_id)
+                with sp:
+                    table = ds.to_table(io_depth=held)
+                # exact for this query while queries on the dataset don't
+                # overlap (the source accounting is dataset-wide)
+                rec.io = dataclasses.asdict(source.stats.delta(before))
+            finally:
+                if scope is not None:
+                    scope.__exit__(None, None, None)
+            rec.rows = _table_rows(table)
+            rec.result_bytes = executor.table_nbytes(table)
+            rec.wall_seconds = wall = time.perf_counter() - t0
+            spans_out = None
+            if tracer is not None:
+                rec.stages = _querylog.stage_dict(tracer.aggregate())
+                rec.dropped_spans = tracer.dropped
+                slow = (self.query_log.slow_seconds is not None
+                        and wall >= self.query_log.slow_seconds)
+                if collect_spans or slow:
+                    spans_out = [_trace.span_to_dict(s, wall=True)
+                                 for s in tracer.spans]
+                if slow:
+                    rec.spans = spans_out
+            self._record(rec)
+            with self._lock:
+                self._queries += 1
+            _metrics.counter("bullion.serve.queries").inc()
+            _metrics.histogram("bullion.serve.wall_seconds").observe(wall)
+            return QueryResult(table=table, rows=rec.rows, cache_hit=hit,
+                               fingerprint=fp, wall_seconds=wall,
+                               tenant=tenant, trace_id=trace_id,
+                               spans=spans_out if collect_spans else None)
+        except Exception as e:
+            rec.outcome = "error"
+            rec.error = f"{type(e).__name__}: {e}"
+            rec.wall_seconds = time.perf_counter() - t0
+            self._record(rec)
+            e.__bullion_logged__ = True   # _session won't double-record
+            raise
         finally:
-            budget.release(held)
-        rows = 0
-        for col in table.values():
-            rows = len(col)
-            break
-        wall = time.perf_counter() - t0
-        with self._lock:
-            self._queries += 1
-        _metrics.counter("bullion.serve.queries").inc()
-        _metrics.histogram("bullion.serve.wall_seconds").observe(wall)
-        return QueryResult(table=table, rows=rows, cache_hit=hit,
-                           fingerprint=fp, wall_seconds=wall, tenant=tenant)
+            if held and budget is not None:
+                budget.release(held)
 
     # -- introspection ----------------------------------------------------------
     def stats(self) -> dict:
-        import dataclasses
         with self._lock:
             tenants = {name: {"io_depth": b.depth,
                               "peak_in_flight": b.peak_in_flight,
@@ -320,6 +404,7 @@ class DatasetServer:
                        for name, b in self._tenants.items()}
             queries, errors, pending = \
                 self._queries, self._errors, self._pending
+        tr = _trace.current()
         return {
             "queries": queries,
             "errors": errors,
@@ -334,7 +419,17 @@ class DatasetServer:
                 name: {"shards": src.n_shards, "rows": src.num_rows,
                        "io": dataclasses.asdict(src.stats)}
                 for name, src in self._sources.items()},
+            # a truncated recording must be visible, not look complete
+            "trace": {"installed": tr is not None,
+                      "spans": len(tr.spans) if tr is not None else 0,
+                      "dropped": tr.dropped if tr is not None else 0},
+            "query_log": self.query_log.summary(),
         }
+
+    def metrics_text(self) -> str:
+        """The process metrics registry rendered as Prometheus text
+        exposition format (also served by the ``metrics`` wire command)."""
+        return prometheus_text()
 
     # -- socket front-end -------------------------------------------------------
     def serve(self, socket_path: Optional[str] = None) -> str:
@@ -367,18 +462,37 @@ class DatasetServer:
             t.start()
             self._conn_threads.append(t)
 
+    def _wire_error(self, error: str, op=None, dataset=None) -> None:
+        """Record a protocol-level failure (malformed/oversized frame,
+        unknown command, bad request) in the query log: broken clients are
+        production events too."""
+        self._record(_querylog.QueryRecord(
+            ts=time.time(), origin="serve.wire",
+            dataset=str(dataset) if dataset is not None else "",
+            outcome="error", error=error,
+            predicate=f"op={op!r}" if op is not None else None))
+
     def _session(self, conn: socket.socket) -> None:
         with conn:
             while True:
                 try:
                     req = wire.recv_msg(conn)
-                except (ConnectionError, ValueError, OSError):
+                except (ConnectionError, ValueError) as e:
+                    # torn or oversized frame: drop this session (the frame
+                    # boundary is lost), leave a record, server lives on
+                    self._wire_error(f"{type(e).__name__}: {e}")
+                    return
+                except OSError:
                     return
                 if req is None:
                     return
                 try:
                     resp = self._dispatch(req)
                 except Exception as e:   # per-request fault isolation
+                    if not getattr(e, "__bullion_logged__", False):
+                        self._wire_error(f"{type(e).__name__}: {e}",
+                                         op=req.get("op"),
+                                         dataset=req.get("dataset"))
                     resp = {"ok": False,
                             "error": f"{type(e).__name__}: {e}"}
                 try:
@@ -394,23 +508,38 @@ class DatasetServer:
             return {"ok": True, "stats": self.stats()}
         if op == "datasets":
             return {"ok": True, "datasets": self.datasets()}
+        if op == "metrics":
+            return {"ok": True, "text": self.metrics_text()}
+        if op == "log":
+            return {"ok": True,
+                    "records": [r.to_dict() for r in
+                                self.query_log.tail(req.get("n", 50))]}
         if op == "explain":
             return {"ok": True, "explain": self.explain(
                 req["dataset"], columns=req.get("columns"),
                 where=wire.decode_predicate(req.get("where")),
                 head=req.get("head"))}
         if op == "query":
+            trace_req = req.get("trace") or {}
+            trace_id = trace_req.get("id")
             res = self.query(
                 req["dataset"], columns=req.get("columns"),
                 where=wire.decode_predicate(req.get("where")),
                 head=req.get("head"),
                 tenant=req.get("tenant", DEFAULT_TENANT),
-                io_depth=req.get("io_depth"))
-            return {"ok": True, "rows": res.rows,
+                io_depth=req.get("io_depth"),
+                trace_id=trace_id, collect_spans=bool(trace_req))
+            resp = {"ok": True, "rows": res.rows,
                     "cache_hit": res.cache_hit,
                     "fingerprint": res.fingerprint,
                     "wall_seconds": res.wall_seconds,
                     "table": wire.encode_table(res.table)}
+            if trace_req:
+                resp["trace"] = {"id": trace_id,
+                                 "spans": res.spans or []}
+            return resp
+        self._wire_error(f"unknown op {op!r}", op=op,
+                         dataset=req.get("dataset"))
         return {"ok": False, "error": f"unknown op {op!r}"}
 
     # -- lifecycle --------------------------------------------------------------
@@ -420,6 +549,12 @@ class DatasetServer:
             return
         self._closed = True
         if self._listener is not None:
+            try:
+                # close() alone leaves the accept thread blocked until its
+                # join timeout; shutdown() wakes accept() immediately
+                self._listener.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 self._listener.close()
             finally:
@@ -434,6 +569,7 @@ class DatasetServer:
         self._pool.shutdown(wait=True)
         for src in self._sources.values():
             src.close()
+        self.query_log.close()
 
     def __enter__(self) -> "DatasetServer":
         return self

@@ -33,6 +33,10 @@ MAX_MESSAGE = 1 << 30
 
 def send_msg(sock: socket.socket, obj: dict) -> None:
     data = json.dumps(obj).encode()
+    if len(data) > MAX_MESSAGE:
+        # refuse to emit a frame the peer is contractually bound to reject
+        # (and that would wrap the u32 length prefix past 4 GiB)
+        raise ValueError(f"frame of {len(data)} bytes exceeds {MAX_MESSAGE}")
     sock.sendall(_LEN.pack(len(data)) + data)
 
 
@@ -49,7 +53,14 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
 
 
 def recv_msg(sock: socket.socket) -> Optional[dict]:
-    """One framed message, or None on orderly EOF."""
+    """One framed message, or None on orderly EOF.
+
+    Error contract (what the server's session loop and its query log key
+    off): ``ValueError`` for an unparseable frame — oversized length
+    prefix, or a body that is not valid JSON (``json.JSONDecodeError`` is
+    a ``ValueError``) — and ``ConnectionError`` for a peer that vanished
+    mid-frame. Both are session-fatal: the frame boundary is gone, so the
+    caller must drop the connection (never the process)."""
     head = _recv_exact(sock, _LEN.size)
     if head is None:
         return None
@@ -59,7 +70,11 @@ def recv_msg(sock: socket.socket) -> Optional[dict]:
     body = _recv_exact(sock, n)
     if body is None:
         raise ConnectionError("peer closed mid-frame")
-    return json.loads(body.decode())
+    msg = json.loads(body.decode())
+    if not isinstance(msg, dict):
+        raise ValueError(f"frame payload must be a JSON object, "
+                         f"got {type(msg).__name__}")
+    return msg
 
 
 # ---------------------------------------------------------------------------

@@ -169,7 +169,13 @@ def test_recluster_strictly_improves_pruning(tmp_path):
     with dataset(out) as ds:
         q = ds.where(C("id") == victim).select(["score"])
         post = q.physical_plan()
-        assert post.bytes_pruned > pre.bytes_pruned
+        # sketches already refute most groups on the unclustered probe
+        # (value membership needs no clustering), so measure the recluster
+        # win on what sort_by actually changes: groups the zone maps alone
+        # can prove away
+        pre_zone = pre.groups_pruned - pre.groups_pruned_sketch
+        post_zone = post.groups_pruned - post.groups_pruned_sketch
+        assert post_zone > pre_zone
         # the reclustered probe still returns the right row
         got = q.to_table()["score"]
     src = int(np.flatnonzero(table["id"] == victim)[0])

@@ -1,0 +1,436 @@
+"""Production-telemetry tests: the structured query log, wire-propagated
+traces + merged client/server profiles, Prometheus metrics exposition, and
+wire-protocol error handling (one broken session must never take the
+server down — and must leave a query-log record behind)."""
+
+import json
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BullionWriter, ColumnSpec
+from repro.dataset import clear_footer_cache, dataset
+from repro.obs import querylog, trace
+from repro.obs.expose import parse_prometheus_text, prometheus_text
+from repro.scan import C
+from repro.serve import DatasetServer, ServeClient
+from repro.serve.wire import MAX_MESSAGE
+
+N_ROWS = 2048
+
+
+@pytest.fixture(autouse=True)
+def _isolate_tracer():
+    """CI runs the suite under BULLION_TRACE; keep installs from leaking."""
+    prev = trace.current()
+    yield
+    trace.install(prev)
+
+
+@pytest.fixture
+def shards(tmp_path):
+    clear_footer_cache()
+    d = tmp_path / "shards"
+    d.mkdir()
+    ids = np.arange(N_ROWS, dtype=np.int64)
+    w = BullionWriter(str(d / "part-0000.bln"),
+                      [ColumnSpec("id", "int64"),
+                       ColumnSpec("val", "float32")],
+                      rows_per_group=512, page_rows=128)
+    w.write_table({"id": ids, "val": (ids * 2).astype(np.float32)})
+    w.close()
+    return str(d), ids
+
+
+# ---------------------------------------------------------------------------
+# query log: served queries
+# ---------------------------------------------------------------------------
+
+def test_served_query_record_reconciles_with_iostats(shards):
+    """The acceptance criterion: a served query's record carries stage
+    timings and byte/pread counts that reconcile *exactly* with the
+    IOStats delta the execution charged (serial io_depth=1, sole query)."""
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        # first query pays the lazy shard open: its delta carries the
+        # footer preads on top of the data reads, and the record says so
+        cold = srv.query("t", columns=["id", "val"], io_depth=1)
+        assert srv.query_log.records()[0].io["footer_bytes"] > 0
+        res = srv.query("t", columns=["id", "val"], io_depth=1,
+                        collect_spans=True)
+        assert res.rows == N_ROWS
+        rec = srv.query_log.records()[1]
+        assert rec.origin == "serve" and rec.outcome == "ok"
+        assert rec.dataset == "t" and rec.tenant == "default"
+        assert rec.rows == N_ROWS and rec.fingerprint == cold.fingerprint
+        assert rec.cache_hit is True
+        assert rec.result_bytes == sum(a.nbytes
+                                       for a in res.table.values())
+        assert rec.wall_seconds > 0
+        assert rec.io["footer_bytes"] == 0      # warm: data preads only
+        # exact I/O reconciliation: every byte the reader pulled is either
+        # a byte the decode stage consumed or a coalescing hole; every page
+        # read is either its own pread or was merged into a neighbor's
+        io, st = rec.io, rec.stages["decode.pread"]
+        assert st["bytes"] + io["wasted_bytes"] == io["bytes_read"]
+        assert st["pages"] == io["preads"] + io["coalesced_preads"]
+        assert st["calls"] >= 1 and st["seconds"] > 0
+        assert "decode.decode" in rec.stages
+
+
+def test_query_log_ring_eviction_and_summary(shards):
+    d, _ = shards
+    log = querylog.QueryLog(capacity=3)
+    with DatasetServer({"t": d}, query_log=log) as srv:
+        for _ in range(5):
+            srv.query("t", columns=["id"], head=4)
+        with pytest.raises(KeyError):
+            srv.query("nope")
+        s = srv.query_log.summary()
+        assert s["total"] == 6 and s["errors"] == 1
+        assert s["retained"] == 3 and s["capacity"] == 3
+        assert s["by_dataset"]["t"]["queries"] >= 2
+        assert len(srv.query_log) == 3
+
+
+def test_error_query_leaves_error_record(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        with pytest.raises(KeyError):
+            srv.query("missing")
+        (rec,) = srv.query_log.records()
+        assert rec.outcome == "error" and "missing" in rec.error
+        assert rec.dataset == "missing"
+
+
+def test_slow_query_promotes_span_tree(shards):
+    """BULLION_SLOW_MS: with the threshold armed (here: 0 — everything is
+    slow) the serve path runs every query under a scoped tracer and the
+    record arrives with its full span list attached."""
+    d, _ = shards
+    log = querylog.QueryLog(slow_seconds=0.0)
+    with DatasetServer({"t": d}, query_log=log) as srv:
+        srv.query("t", columns=["id"])
+        (rec,) = srv.query_log.records()
+        assert rec.slow is True
+        assert rec.stages and "serve.query" in rec.stages
+        assert rec.spans, "slow record must carry the promoted span tree"
+        names = {s["name"] for s in rec.spans}
+        assert "serve.query" in names
+        assert srv.query_log.slow == 1
+
+
+def test_slow_ms_env_validation(monkeypatch):
+    monkeypatch.setenv("BULLION_SLOW_MS", "250")
+    assert querylog.QueryLog().slow_seconds == 0.25
+    monkeypatch.setenv("BULLION_SLOW_MS", "bogus")
+    with pytest.raises(ValueError, match="BULLION_SLOW_MS"):
+        querylog.QueryLog()
+    monkeypatch.setenv("BULLION_SLOW_MS", "-5")
+    with pytest.raises(ValueError, match=">= 0"):
+        querylog.QueryLog()
+
+
+def test_record_json_roundtrips(shards):
+    """Every record must survive the JSONL sink: json.dumps(to_dict())."""
+    d, _ = shards
+    log = querylog.QueryLog(slow_seconds=0.0)   # force stages + spans
+    with DatasetServer({"t": d}, query_log=log) as srv:
+        srv.query("t", where=C("id") == 7, io_depth=1)
+        (rec,) = srv.query_log.records()
+        line = json.dumps(rec.to_dict())
+        back = json.loads(line)
+        assert back["rows"] == rec.rows and back["io"] == rec.io
+
+
+# ---------------------------------------------------------------------------
+# query log: local runs
+# ---------------------------------------------------------------------------
+
+def test_local_run_records_into_jsonl_sink(shards, tmp_path, monkeypatch):
+    """BULLION_QUERY_LOG end-to-end: local Dataset terminals record, the
+    sink accumulates one JSON line per query."""
+    d, _ = shards
+    sink = tmp_path / "q.jsonl"
+    monkeypatch.setattr(querylog, "LOG",
+                        querylog.QueryLog(sink_path=str(sink)))
+    assert querylog.local_enabled()
+    with dataset(d) as ds:
+        t = ds.where(C("id") < 100).select(["val"]).to_table()
+        assert len(t["val"]) == 100
+    lines = [json.loads(ln) for ln in sink.read_text().splitlines()]
+    (rec,) = lines
+    assert rec["origin"] == "local" and rec["outcome"] == "ok"
+    assert rec["rows"] == 100 and rec["io"]["preads"] > 0
+    assert rec["fingerprint"]
+    querylog.LOG.close()
+
+
+def test_local_recording_off_by_default(shards, monkeypatch):
+    d, _ = shards
+    monkeypatch.setattr(querylog, "LOG", querylog.QueryLog())
+    assert not querylog.local_enabled()
+    with dataset(d) as ds:
+        ds.select(["id"]).head(4).to_table()
+    assert len(querylog.LOG) == 0
+    # programmatic enable, no env
+    monkeypatch.setattr(querylog, "_local", True)
+    with dataset(d) as ds:
+        ds.select(["id"]).head(4).to_table()
+    (rec,) = querylog.LOG.records()
+    assert rec.origin == "local" and rec.rows == 4
+
+
+def test_local_error_recorded(shards, monkeypatch):
+    """An execution-time failure still leaves a structured record (plan
+    validation errors fire before execution starts and stay unlogged —
+    nothing ran, nothing to account)."""
+    d, _ = shards
+    monkeypatch.setattr(querylog, "LOG", querylog.QueryLog())
+    monkeypatch.setattr(querylog, "_local", True)
+    with dataset(d) as ds:
+        with pytest.raises(ValueError, match="io_depth"):
+            ds.select(["id"]).to_table(io_depth=0)
+    rec = querylog.LOG.records()[-1]
+    assert rec.outcome == "error" and "io_depth" in rec.error
+
+
+# ---------------------------------------------------------------------------
+# wire-propagated traces + merged profile
+# ---------------------------------------------------------------------------
+
+def test_client_profile_merges_server_spans(shards, tmp_path):
+    d, ids = shards
+    victim = int(ids[99])
+    out = tmp_path / "merged.json"
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        with ServeClient(path, trace=True) as cli:
+            res = cli.query("t", where=C("id") == victim)
+            assert res.trace_id == cli.trace_id
+            prof = cli.profile(str(out))
+    # one file, one trace id, both sides present
+    doc = json.loads(out.read_text())
+    assert doc["bullionTraceId"] == cli.trace_id
+    names = {ev["name"] for ev in doc["traceEvents"]
+             if ev.get("ph") == "X"}
+    assert "client.rpc" in names and "serve.query" in names
+    # the server's spans sit on offset tracks, labeled as such
+    server_evs = [ev for ev in doc["traceEvents"]
+                  if ev.get("ph") == "X" and ev["name"] == "serve.query"]
+    client_evs = [ev for ev in doc["traceEvents"]
+                  if ev.get("ph") == "X" and ev["name"] == "client.rpc"]
+    assert server_evs and client_evs
+    assert all(ev["tid"] >= (1 << 24) for ev in server_evs)
+    # same process -> same wall epoch: the query's server span nests
+    # inside the client RPC that carried it
+    rpc = [ev for ev in client_evs if ev["args"].get("op") == "query"]
+    sq = server_evs[0]
+    assert any(ev["ts"] <= sq["ts"] and
+               sq["ts"] + sq["dur"] <= ev["ts"] + ev["dur"] + 1
+               for ev in rpc)
+    # the server stamped the propagated id on its span
+    assert sq["args"]["trace_id"] == cli.trace_id
+    # aggregate view over the merged spans works too
+    assert "serve.query" in prof.aggregate()
+
+
+def test_server_record_carries_wire_trace_id(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        with ServeClient(path, trace=True) as cli:
+            cli.query("t", columns=["id"], head=2)
+        rec = srv.query_log.records()[-1]
+        assert rec.trace_id == cli.trace_id
+
+
+def test_untraced_client_gets_no_spans(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        with ServeClient(path) as cli:
+            cli.query("t", columns=["id"], head=2)
+            with pytest.raises(RuntimeError, match="trace=True"):
+                cli.profile()
+
+
+def test_span_wall_clock_codec_roundtrip():
+    with trace.collect() as tr:
+        with trace.span("unit.op", cat="test", pages=np.int64(3)):
+            pass
+    (rec,) = tr.spans
+    d = trace.span_to_dict(rec, wall=True)
+    json.dumps(d)                       # wire-safe (numpy args coerced)
+    back = trace.span_from_dict(d, wall=True)
+    assert back.name == rec.name and back.tid == rec.tid
+    assert abs(back.ts - rec.ts) < 1e-3
+    assert back.args["pages"] == 3
+
+
+# ---------------------------------------------------------------------------
+# metrics exposition
+# ---------------------------------------------------------------------------
+
+def test_metrics_text_is_parseable_prometheus(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        srv.query("t", columns=["id"], head=4)
+        text = srv.metrics_text()
+    samples = parse_prometheus_text(text)     # raises on malformed lines
+    assert samples["bullion_serve_queries"] >= 1
+    q50 = 'bullion_serve_wall_seconds{quantile="0.5"}'
+    assert q50 in samples
+    assert samples["bullion_serve_wall_seconds_count"] >= 1
+    assert text.endswith("\n")
+
+
+def test_metrics_over_the_wire(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        with ServeClient(path) as cli:
+            cli.query("t", columns=["id"], head=4)
+            samples = parse_prometheus_text(cli.metrics_text())
+            assert samples["bullion_serve_queries"] >= 1
+            recs = cli.server_log(10)
+            assert recs and recs[-1]["origin"] == "serve"
+
+
+def test_prometheus_parser_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus_text("this is { not prometheus\n")
+    assert parse_prometheus_text("# just a comment\n") == {}
+    assert parse_prometheus_text("ok_metric 1.5\n") == {"ok_metric": 1.5}
+
+
+def test_prometheus_render_empty_snapshot():
+    assert prometheus_text({}) == ""
+
+
+# ---------------------------------------------------------------------------
+# wire-protocol error paths
+# ---------------------------------------------------------------------------
+
+def _raw_conn(path):
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.settimeout(5.0)
+    s.connect(path)
+    return s
+
+
+def _session_dead(sock):
+    """After a fatal frame the server must close the session: the next
+    read sees EOF (no reply, no crash)."""
+    try:
+        return sock.recv(1) == b""
+    except (ConnectionError, OSError):
+        return True
+
+
+@pytest.mark.parametrize("frame", [
+    struct.pack("<I", 16) + b"!!not json here!",          # garbage body
+    struct.pack("<I", 11) + b"[1, 2, 3]\n\n",             # JSON, not a dict
+    struct.pack("<I", MAX_MESSAGE + 1),                   # oversized prefix
+    struct.pack("<I", 4096) + b"trunc",                   # truncated frame
+], ids=["garbage", "non-dict", "oversized", "truncated"])
+def test_malformed_frame_kills_session_not_server(shards, frame):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        s = _raw_conn(path)
+        s.sendall(frame)
+        if frame.endswith(b"trunc"):
+            s.shutdown(socket.SHUT_WR)     # peer vanishes mid-frame
+        assert _session_dead(s)
+        s.close()
+        # the server survives and still answers new sessions
+        with ServeClient(path) as cli:
+            assert cli.ping()
+            assert cli.query("t", columns=["id"], head=1).rows == 1
+        # ... and the broken session left a wire-error record
+        wire_recs = [r for r in srv.query_log.records()
+                     if r.origin == "serve.wire"]
+        assert wire_recs and wire_recs[0].outcome == "error"
+
+
+def test_unknown_op_is_answered_and_logged(shards):
+    d, _ = shards
+    with DatasetServer({"t": d}) as srv:
+        path = srv.serve()
+        from repro.serve import wire
+        s = _raw_conn(path)
+        wire.send_msg(s, {"op": "self_destruct"})
+        resp = wire.recv_msg(s)
+        assert resp == {"ok": False, "error": "unknown op 'self_destruct'"}
+        # recoverable: the same session keeps working
+        wire.send_msg(s, {"op": "ping"})
+        assert wire.recv_msg(s)["ok"]
+        s.close()
+        rec = [r for r in srv.query_log.records()
+               if r.origin == "serve.wire"][0]
+        assert "self_destruct" in rec.error
+
+
+def test_send_msg_refuses_oversized_frame(monkeypatch):
+    from repro.serve import wire
+
+    class _Null:
+        def sendall(self, data):          # pragma: no cover - must not run
+            raise AssertionError("oversized frame was sent")
+
+    monkeypatch.setattr(wire, "MAX_MESSAGE", 4096)
+    with pytest.raises(ValueError, match="exceeds"):
+        wire.send_msg(_Null(), {"pad": "x" * 8192})
+
+
+# ---------------------------------------------------------------------------
+# hot path stays allocation-free; stats/explain surface drops
+# ---------------------------------------------------------------------------
+
+def test_serve_hot_path_allocates_no_spans(shards):
+    """With no sink, no slow threshold, no tracer, and no span request,
+    serving must not allocate a single Span object (the PR's perf
+    criterion, extending the scan-path assertion in test_obs)."""
+    d, _ = shards
+    trace.install(None)
+    with DatasetServer({"t": d}) as srv:
+        assert srv.query_log.slow_seconds is None or \
+            pytest.skip("BULLION_SLOW_MS set in this environment")
+        srv.query("t", columns=["id"], head=8)      # warm the plan cache
+        before = trace.allocations()
+        res = srv.query("t", columns=["id"], head=8)
+        assert res.cache_hit and res.rows == 8
+        assert trace.allocations() == before, \
+            "default serve path must not allocate Span objects"
+        # the query log still recorded both queries (records are not spans)
+        assert len(srv.query_log) == 2
+
+
+def test_stats_reports_trace_and_query_log(shards):
+    d, _ = shards
+    trace.install(None)
+    with DatasetServer({"t": d}) as srv:
+        srv.query("t", columns=["id"], head=2)
+        st = srv.stats()
+        assert st["trace"] == {"installed": False, "spans": 0, "dropped": 0}
+        assert st["query_log"]["total"] == 1
+        tr = trace.Tracer(max_spans=1)
+        trace.install(tr)
+        with trace.span("a"):
+            pass
+        with trace.span("b"):
+            pass
+        st = srv.stats()
+        assert st["trace"]["installed"] and st["trace"]["dropped"] == 1
+
+
+def test_explain_analyze_reports_span_drops(shards):
+    d, _ = shards
+    trace.install(None)
+    with dataset(d) as ds:
+        text = ds.select(["id"]).explain(analyze=True)
+    assert "spans:" in text and "dropped" in text
