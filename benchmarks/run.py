@@ -38,6 +38,9 @@ STAT_FIELDS = {
     "footer_cache_hits": "footer_cache_hits",
     "coalesced_preads": "coalesced_preads",
     "wasted_bytes": "wasted_bytes",
+    "backend_fetches": "backend_fetches",
+    "backend_retries": "backend_retries",
+    "backend_wasted_bytes": "backend_wasted_bytes",
 }
 STAT_COLUMNS = tuple(STAT_FIELDS)
 

@@ -4,7 +4,9 @@ I/O with ``io_depth=``), delete a user GDPR-style, audit the physical
 erasure, compact + recluster the file into a fresh sharded dataset with
 ``Dataset.write_to``, profile a scan with the observability layer
 (``explain(analyze=True)``, ``Dataset.profile``, the metrics registry),
-then stand the shards up behind the multi-tenant dataset service
+read the same shards back from an (in-process) object store via
+``bullion://`` URIs, then stand them up behind the multi-tenant dataset
+service
 (``repro.serve.DatasetServer``: prepared plans, admission control, and
 bloom-sketch point lookups on unclustered columns).
 
@@ -164,6 +166,33 @@ def main(out_dir=None):
               f"{st.coalesced_preads} page reads coalesced, "
               f"{st.wasted_bytes}B hole bytes, "
               f"{st.footer_cache_hits}/{ds.n_shards} footers from cache")
+
+    # --- object storage: the same plan over bullion:// URIs -----------------
+    # shards need never touch local disk: point the process at an object
+    # store (``configure_object_store()`` or ``BULLION_OBJECT_STORE``) and
+    # pass ``bullion://bucket/key`` URIs. The storage backend turns each
+    # coalesced run into an S3-style ranged GET with retry + capped
+    # exponential backoff, ``io_depth=`` bounds concurrent in-flight ranges
+    # (batched on a shared event loop), and footers are cached process-wide
+    # with ETag/length validation. Here the in-process fake object store the
+    # test suite uses fronts the temp dir over real HTTP.
+    from repro.core.backend import configure_object_store
+    from repro.testing import FakeObjectStore
+    with FakeObjectStore(td) as objstore:
+        configure_object_store(objstore.endpoint)
+        try:
+            uris = [f"bullion://shards/part-{s:04d}.bln" for s in range(4)]
+            with dataset(uris) as ds:
+                tbl = ds.where(C("ctr_7d") >= 0.99) \
+                    .select(["user_id", "ctr_7d"]).to_table(io_depth=4)
+                st = ds.stats
+            print(f"object-store read: {len(tbl['user_id'])} hot rows over "
+                  f"{st.backend_fetches} ranged GETs "
+                  f"({st.backend_retries} retried, "
+                  f"{st.backend_wasted_bytes}B hole bytes), "
+                  f"{st.preads} local preads")
+        finally:
+            configure_object_store(None)
 
     # --- GDPR delete (§2.1): locate via a raw-row-space plan, physically
     # erase in place, audit -------------------------------------------------

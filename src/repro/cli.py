@@ -5,8 +5,9 @@ Run as ``python -m repro.cli <command>``:
 * ``inspect PATH...`` — dump a shard's anatomy: footer sections, columns
   (kind/dtype/quantization), per-group layout, and with ``--pages`` every
   page's offset/size/rows/encoding, zone map, deletion vector, and sketch
-  presence. Accepts files, shard directories, and globs (any dataset
-  spec ``dataset()`` accepts).
+  presence. Accepts files, shard directories, globs, and
+  ``bullion://bucket/key`` object-store URIs (any dataset spec
+  ``dataset()`` accepts).
 * ``fsck PATH...`` — verify integrity: page checksums against the footer,
   the Merkle group/root bounds, deletion-vector soundness (extent bounds,
   compacted-page row accounting), zone-map consistency (decoded values
@@ -35,6 +36,7 @@ from typing import Optional
 
 import numpy as np
 
+from .core.backend import open_shard
 from .core.encodings import blob_encoding_name
 from .core.footer import ColKind, PageType, Sec, read_footer
 from .core.merkle import combine, page_hash
@@ -137,14 +139,13 @@ def inspect_shard(path: str, *, pages: bool = False, out=None) -> None:
     print(f"  {'page':<6}{'col':<16}{'type':<14}{'rows':<7}{'offset':<10}"
           f"{'size':<9}{'enc':<17}{'zone map':<26}{'dv':<6}sketch",
           file=out)
-    with open(path, "rb") as f:
+    with open_shard(path) as h:
         for p in range(fv.n_pages):
             flag = int(flags[p])
             ptype = PageType(flag & _PTYPE_MASK).name.lower()
             if flag & _COMPACTED:
                 ptype += "+compact"
-            f.seek(int(offs[p]))
-            head = f.read(min(int(sizes[p]), 64))
+            head = h.pread(int(offs[p]), min(int(sizes[p]), 64))
             try:
                 enc = blob_encoding_name(head)
             except Exception:
@@ -238,7 +239,7 @@ class _Fsck:
         cksums = fv.arr(Sec.PAGE_CHECKSUM, np.uint64) \
             if fv.has(Sec.PAGE_CHECKSUM) else None
         raw_pages: dict[int, bytes] = {}
-        with open(self.path, "rb") as f:
+        with open_shard(self.path) as h:
             for p in range(n_pages):
                 off, size = int(offs[p]), int(sizes[p])
                 if not self.check(
@@ -246,8 +247,11 @@ class _Fsck:
                         f"page {p}: extent [{off}, {off + size}) outside "
                         f"data region [0, {foot_off})"):
                     continue
-                f.seek(off)
-                blob = f.read(size)
+                try:
+                    blob = h.pread(off, size)
+                except OSError as e:
+                    self.fail(f"page {p}: unreadable: {e}")
+                    continue
                 raw_pages[p] = blob
                 if cksums is not None:
                     self.check(

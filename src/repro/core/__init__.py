@@ -2,8 +2,13 @@
 
 Submodules: encodings (§2.6 cascading framework), footer/reader (§2.3 wide
 table projection), writer/multimodal (§2.5 quality-aware organization),
-deletion/merkle (§2.1 compliance), quantization (§2.4), sparse_delta (§2.2).
+deletion/merkle (§2.1 compliance), quantization (§2.4), sparse_delta (§2.2),
+backend (storage backends: local pread / object-store ranged GETs behind
+``bullion://`` URIs / the async batched range fetcher).
 """
+
+from .backend import (ObjectStoreBackend, RetryPolicy, StorageBackend,
+                      configure_object_store, open_shard, register_backend)
 
 from .deletion import (Compliance, DeleteStats, delete_rows, delete_where,
                        verify_deleted)
@@ -20,6 +25,8 @@ from .writer import BullionWriter, ColumnSpec, quality_sort
 
 __all__ = [
     "BullionReader", "BullionWriter", "ColumnSpec", "ColKind", "Compliance",
+    "ObjectStoreBackend", "RetryPolicy", "StorageBackend",
+    "configure_object_store", "open_shard", "register_backend",
     "CostWeights", "DeleteStats", "EncodeContext", "FooterView", "MediaStore",
     "MerkleTree", "MultimodalSample", "PageType", "QuantMode", "QuantSpec",
     "Sec", "affine_spec_for", "choose_encoding", "decode_blob", "delete_rows",

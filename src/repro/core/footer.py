@@ -305,7 +305,13 @@ def notify_footer_rewrite(path: str) -> None:
 
 def read_footer(path: str) -> tuple[FooterView, int]:
     """Read footer with two preads (tail, then footer) — the paper's access
-    pattern. Returns (view, footer_offset)."""
+    pattern. Returns (view, footer_offset). ``bullion://`` URIs route
+    through their storage backend (one speculative tail GET) instead of the
+    local filesystem."""
+    from . import backend as _backend
+    if _backend.is_remote(path):
+        with _backend.open_shard(path) as h:
+            return _backend.read_shard_footer(h)
     with open(path, "rb") as f:
         f.seek(-_TAIL.size, 2)
         tail = f.read(_TAIL.size)

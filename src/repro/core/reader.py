@@ -27,20 +27,23 @@ import numpy as np
 
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
+from . import backend as _backend
 from .footer import ColKind, Sec, read_footer
 from .quantization import QuantSpec
 
 COALESCE_GAP = 64 * 1024  # merge preads when the hole is smaller than this
 
 
-def default_coalesce_gap() -> int:
+def default_coalesce_gap(remote: bool = False) -> int:
     """Coalescing gap in bytes: ``BULLION_COALESCE_GAP`` overrides the
-    built-in 64 KiB default fleet-wide. 0 still merges physically
-    contiguous ranges (two preads for one contiguous span is never right)
-    but bridges no holes, so ``wasted_bytes`` stays 0."""
+    built-in defaults fleet-wide — 64 KiB for local files, 1 MiB for
+    object-store shards, where hole bytes are cheap next to per-request
+    latency. 0 still merges physically contiguous ranges (two preads for
+    one contiguous span is never right) but bridges no holes, so
+    ``wasted_bytes`` stays 0."""
     env = os.environ.get("BULLION_COALESCE_GAP")
     if env is None or not env.strip():
-        return COALESCE_GAP
+        return _backend.REMOTE_COALESCE_GAP if remote else COALESCE_GAP
     try:
         gap = int(env)
     except ValueError:
@@ -71,6 +74,13 @@ class IOStats:
     groups_pruned_sketch: int = 0  # row groups the zone maps admitted but a
                                    # bloom value sketch refuted (point probes
                                    # on unclustered columns)
+    backend_fetches: int = 0  # ranged GETs a storage backend served (remote
+                              # shards; local reads stay in ``preads``)
+    backend_retries: int = 0  # backend requests retried after a 5xx,
+                              # timeout, or truncated body
+    backend_wasted_bytes: int = 0  # hole bytes fetched remotely because run
+                                   # coalescing bridged a gap (the remote
+                                   # twin of ``wasted_bytes``)
 
     # -- aggregation (the one field-complete merge every consumer uses) -------
     def merge(self, other: "IOStats") -> "IOStats":
@@ -103,39 +113,58 @@ class BullionReader:
                  coalesce_gap: Optional[int] = None):
         self.path = path
         t0 = time.perf_counter()
+        # the storage backend owns *where* bytes come from: a local fd
+        # (byte-identical to the pre-backend read path) or bullion://
+        # ranged GETs — everything above this handle is backend-agnostic
+        self._handle = _backend.open_shard(path)
+        self._remote = self._handle.is_remote
         if footer is None:
-            self.footer, self.footer_offset = read_footer(path)
+            if self._remote:
+                self.footer, self.footer_offset = \
+                    _backend.read_shard_footer(self._handle)
+            else:
+                self.footer, self.footer_offset = read_footer(path)
         else:
             # pre-parsed (FooterView, offset) from dataset discovery — the
             # metadata was read exactly once, by the DataSource
             self.footer, self.footer_offset = footer
         if coalesce_gap is None:
-            self.coalesce_gap = default_coalesce_gap()
+            self.coalesce_gap = default_coalesce_gap(remote=self._remote)
         else:
             self.coalesce_gap = int(coalesce_gap)
             if self.coalesce_gap < 0:
                 raise ValueError(
                     f"coalesce_gap must be >= 0, got {coalesce_gap}")
-        # ``charge_footer=False`` means the footer preads happened elsewhere
-        # (or not at all: a footer-cache hit) and must not be double-counted
-        self.stats = IOStats(preads=2, footer_bytes=len(self.footer._buf),
-                             bytes_read=len(self.footer._buf)) \
-            if charge_footer else IOStats()
+        # ``charge_footer=False`` means the footer reads happened elsewhere
+        # (or not at all: a footer-cache hit) and must not be double-counted.
+        # Local metadata costs two preads (tail, then footer); remote
+        # metadata is one speculative tail GET.
+        flen = len(self.footer._buf)
+        if not charge_footer:
+            self.stats = IOStats()
+        elif self._remote:
+            self.stats = IOStats(backend_fetches=1, footer_bytes=flen,
+                                 bytes_read=flen)
+        else:
+            self.stats = IOStats(preads=2, footer_bytes=flen,
+                                 bytes_read=flen)
         self.stats.metadata_seconds = time.perf_counter() - t0
-        self._f = open(path, "rb")
         self._scanner = None
         self._stats_lock = threading.Lock()
+        # backend-level charges (remote fetches/retries/bytes) land on the
+        # same IOStats every other read path uses
+        self._handle.bind_stats(self.stats, self._stats_lock)
 
     def close(self) -> None:
         """Idempotent: safe to call repeatedly (context-manager exits after
         an aborted plan may race explicit close() calls)."""
-        if self._f is not None:
-            self._f.close()
-            self._f = None
+        if self._handle is not None:
+            self._handle.close()
+            self._handle = None
 
     @property
     def closed(self) -> bool:
-        return self._f is None
+        return self._handle is None
 
     def __enter__(self):
         return self
@@ -172,26 +201,44 @@ class BullionReader:
 
     # -- I/O ----------------------------------------------------------------------
     def _pread(self, offset: int, size: int) -> bytes:
-        """Positional read: ``os.pread`` never moves a shared file cursor,
-        so concurrent ScanTasks on the same shard (parallel execution) are
-        safe on one handle. Stats mutate under a lock for the same reason.
-        Per-call latency lands in the ``bullion.io.pread_seconds`` histogram
-        only while tracing is enabled (two extra clock reads are not free on
-        the disabled hot path)."""
-        f = self._f
-        if f is None:
+        """Positional read: ``os.pread`` (and its remote twin, one ranged
+        GET) never moves a shared cursor, so concurrent ScanTasks on the
+        same shard (parallel execution) are safe on one handle. Stats
+        mutate under a lock for the same reason. Per-call latency lands in
+        the ``bullion.io.pread_seconds`` histogram only while tracing is
+        enabled (two extra clock reads are not free on the disabled hot
+        path); remote handles charge ``backend_fetches``/``bytes_read``
+        themselves."""
+        h = self._handle
+        if h is None:
             raise ValueError(f"{self.path}: reader is closed")
+        if h.is_remote:
+            return h.pread(offset, size)
         if _trace.enabled():
             t0 = time.perf_counter()
-            data = os.pread(f.fileno(), size, offset)
+            data = h.pread(offset, size)
             _metrics.histogram("bullion.io.pread_seconds").observe(
                 time.perf_counter() - t0)
         else:
-            data = os.pread(f.fileno(), size, offset)
+            data = h.pread(offset, size)
         with self._stats_lock:
             self.stats.preads += 1
             self.stats.bytes_read += size
         return data
+
+    def _charge_run(self, off: int, end: int,
+                    extents: Sequence[tuple[int, int, int]]) -> None:
+        """Coalescing accounting for one run: the reads the merge avoided,
+        and the hole bytes it fetched to bridge gaps — charged to
+        ``wasted_bytes`` locally, ``backend_wasted_bytes`` remotely (the
+        tuning knobs differ, so the counters must too)."""
+        covered = sum(s for _, s, _ in extents)
+        with self._stats_lock:
+            self.stats.coalesced_preads += len(extents) - 1
+            if self._remote:
+                self.stats.backend_wasted_bytes += (end - off) - covered
+            else:
+                self.stats.wasted_bytes += (end - off) - covered
 
     def _pread_run(self, off: int, end: int,
                    extents: Sequence[tuple[int, int, int]]) -> dict[int, bytes]:
@@ -202,11 +249,50 @@ class BullionReader:
         (once per run — cheap enough to stay on)."""
         _metrics.histogram("bullion.io.run_bytes").observe(end - off)
         buf = self._pread(off, end - off)
-        covered = sum(s for _, s, _ in extents)
-        with self._stats_lock:
-            self.stats.coalesced_preads += len(extents) - 1
-            self.stats.wasted_bytes += (end - off) - covered
+        self._charge_run(off, end, extents)
         return {p: buf[o - off: o - off + s] for o, s, p in extents}
+
+    def _fetch_runs(self, runs, *, max_in_flight: int = 1, span_meta=None):
+        """Fetch a batch of coalesced runs ``[(off, end, extents)]``,
+        yielding ``(index, {page: bytes} | None, error | None)``.
+
+        Local shards fetch serially in submission order — exactly the one
+        ``_pread_run`` per run the scheduler always issued, byte-identical.
+        Remote shards hand the whole batch to the async range fetcher,
+        which overlaps up to ``max_in_flight`` ranged GETs over keep-alive
+        connections and yields in whatever order the object store answers,
+        so decode overlaps the slowest range instead of waiting on it.
+        Per-run errors are yielded rather than raised: one failed range
+        fails only the tasks it covers."""
+        meta = span_meta or [{} for _ in runs]
+        if not (self._remote and len(runs) > 1 and max_in_flight > 1):
+            for i, (off, end, extents) in enumerate(runs):
+                sp = _trace.span("io.run", cat="io", bytes=end - off,
+                                 extents=len(extents), **meta[i])
+                try:
+                    with sp:
+                        pages = self._pread_run(off, end, extents)
+                except Exception as e:
+                    yield i, None, e
+                else:
+                    yield i, pages, None
+            return
+        sp = _trace.span(
+            "io.run_batch", cat="io", runs=len(runs),
+            bytes=sum(end - off for off, end, _ in runs),
+            max_in_flight=max_in_flight, **meta[0])
+        with sp:
+            ranges = [(off, end) for off, end, _ in runs]
+            for i, body, err in self._handle.fetch_ranges(
+                    ranges, max_in_flight=max_in_flight):
+                if err is not None:
+                    yield i, None, err
+                    continue
+                off, end, extents = runs[i]
+                _metrics.histogram("bullion.io.run_bytes").observe(end - off)
+                self._charge_run(off, end, extents)
+                yield i, {p: body[o - off: o - off + s]
+                          for o, s, p in extents}, None
 
     def _read_pages(self, page_ids: Sequence[int]) -> dict[int, bytes]:
         """Coalesced ranged reads for a set of pages (gap-bridged merging up

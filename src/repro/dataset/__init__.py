@@ -18,6 +18,11 @@ schema-checked shards::
                  .head(10_000)
                  .to_table())
 
+Shards may also live in object storage: pass ``bullion://bucket/key`` URIs
+(after ``repro.core.backend.configure_object_store()`` or with
+``BULLION_OBJECT_STORE`` set) and the same plans execute over ranged GETs,
+with ``to_table(io_depth=N)`` bounding concurrent in-flight ranges.
+
 Legacy surface -> plan equivalent (the legacy calls survive as deprecated
 shims that build exactly these one-file plans):
 

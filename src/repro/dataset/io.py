@@ -29,9 +29,15 @@ by construction: the same pages decode in the same task order; only *when*
 and *how batched* the preads happen changes. ``IOStats.coalesced_preads`` /
 ``wasted_bytes`` account the batching win and its hole-read cost.
 
-This scheduler is the seam future range backends (io_uring submission,
-object-storage ranged GETs) plug into: they replace how a coalesced run is
-fetched, not how plans or decoders work.
+This scheduler is the seam storage backends plug into: the run list from
+``_plan_runs`` is handed to ``BullionReader._fetch_runs`` in per-shard
+batches, and the backend decides how a batch is fetched — one blocking
+``pread`` per run for local files (byte-identical to serial execution), or
+concurrent object-store ranged GETs with bounded in-flight requests and
+completion-order staging for ``bullion://`` shards (``repro.core.backend``).
+Backends replace how a coalesced run is fetched, not how plans or decoders
+work; a failed run fails only the tasks it covers (they fall back to the
+direct read path, which surfaces the real error).
 """
 
 from __future__ import annotations
@@ -39,6 +45,7 @@ from __future__ import annotations
 import threading
 from typing import TYPE_CHECKING, Optional, Sequence
 
+from ..core import backend as _backend
 from ..core.reader import BullionReader
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
@@ -84,6 +91,13 @@ class PrefetchReader:
             else:
                 out[p] = data
         if missing:
+            # fallback reads run through the base reader's coalesced pread
+            # path, so preads / coalesced_preads / wasted_bytes are charged
+            # exactly like the serial path and explain(analyze=True)
+            # reconciliation holds on a partial prefetch; the counter makes
+            # the fallback volume visible next to the staged-page spans
+            _metrics.counter("bullion.io.prefetch_fallback_pages") \
+                .inc(len(missing))
             out.update(self._base._read_pages(missing))
         return out
 
@@ -142,18 +156,21 @@ class IOScheduler:
         sequentially, so offset order tracks task order). Extents merge while
         the hole is within the shard's coalesce gap, the run stays under
         ``max_run_bytes``, and the run spans at most ``io_depth`` tasks —
-        the last cap is what keeps prefetch buffering bounded.
+        the last cap is what keeps prefetch buffering bounded. Remote shards
+        halve that span cap so at least two runs fit the admission window at
+        once: the async batcher can only overlap ranges that are admissible
+        together.
         Returns ``[(shard, off, end, [(page_off, size, page, task_idx)],
         min_task, max_task)]``.
         """
-        from ..core.reader import default_coalesce_gap
-        gap = self._source.coalesce_gap
-        if gap is None:
-            gap = default_coalesce_gap()
         runs = []
         i = 0
         while i < len(self._tasks):
             shard = self._tasks[i].shard
+            gap = self._source.shard_coalesce_gap(shard)
+            span_cap = self._depth
+            if _backend.is_remote(self._source.paths[shard]):
+                span_cap = max(1, self._depth // 2)
             seg: list[tuple[int, int, int, int]] = []
             j = i
             fv = self._source.footer(shard)
@@ -175,7 +192,7 @@ class IOScheduler:
                         break
                     if max(end, o2 + s2) - off > self._max_run_bytes:
                         break
-                    if max(hi_t, t2) - min(lo_t, t2) + 1 > self._depth:
+                    if max(hi_t, t2) - min(lo_t, t2) + 1 > span_cap:
                         break
                     end = max(end, o2 + s2)
                     lo_t, hi_t = min(lo_t, t2), max(hi_t, t2)
@@ -237,7 +254,10 @@ class IOScheduler:
     # -- scheduler thread -------------------------------------------------------
     def _io_loop(self) -> None:
         try:
-            for shard, off, end, extents, _, max_task in self._runs:
+            runs = self._runs
+            i = 0
+            while i < len(runs):
+                shard, max_task = runs[i][0], runs[i][5]
                 # admit on the run's *highest* task so no staged page is
                 # ever more than io_depth - 1 tasks past the newest request
                 wait_sp = _trace.span("io.queue_wait", cat="io",
@@ -252,22 +272,52 @@ class IOScheduler:
                     # occupancy, in tasks) — the scheduler's queue depth
                     _metrics.histogram("bullion.io.read_ahead_tasks") \
                         .observe(max(0, max_task - self._max_requested))
+                    # every already-admissible same-shard run joins this
+                    # submission. Local runs extend on the same strict bound
+                    # they were admitted on (and are fetched serially, so
+                    # batching changes nothing); remote runs extend when the
+                    # run *starts* inside the window — staging may then reach
+                    # ~1.5x io_depth tasks ahead, the price of having >= 2
+                    # ranges in flight for the async batcher to overlap.
+                    remote = _backend.is_remote(self._source.paths[shard])
+                    adm = 4 if remote else 5
+                    j = i + 1
+                    while j < len(runs) and runs[j][0] == shard and \
+                            runs[j][adm] <= self._max_requested \
+                            + self._depth - 1:
+                        j += 1
                 reader = self._source.reader(shard)
-                run_sp = _trace.span("io.run", cat="io", shard=shard,
-                                     bytes=end - off, extents=len(extents),
-                                     task=max_task)
-                with run_sp:
-                    data = reader._pread_run(
-                        off, end, [(o, s, p) for o, s, p, _ in extents])
-                with self._cond:
-                    for _, _, p, t in extents:
-                        buf = self._buffers.get(t)
-                        if buf is not None:
-                            buf[p] = data[p]
-                        self._left[t] -= 1
-                        if self._left[t] == 0:
-                            self._done.add(t)
-                    self._cond.notify_all()
+                batch = runs[i:j]
+                for k, pages, err in reader._fetch_runs(
+                        [(off, end, [(o, s, p) for o, s, p, _ in ext])
+                         for _, off, end, ext, _, _ in batch],
+                        max_in_flight=self._depth,
+                        span_meta=[{"shard": shard, "task": r[5]}
+                                   for r in batch]):
+                    extents = batch[k][3]
+                    with self._cond:
+                        if self._stop:
+                            # closing the generator cancels any still-queued
+                            # remote ranges in the batch
+                            return
+                        if err is not None:
+                            # fail only the tasks this run covered: dropping
+                            # their buffers makes reader_for() return the
+                            # direct-read path, which retries serially and
+                            # surfaces the real error to exactly those tasks
+                            for _, _, _, t in extents:
+                                self._buffers.pop(t, None)
+                                self._done.add(t)
+                        else:
+                            for _, _, p, t in extents:
+                                buf = self._buffers.get(t)
+                                if buf is not None:
+                                    buf[p] = pages[p]
+                                self._left[t] -= 1
+                                if self._left[t] == 0:
+                                    self._done.add(t)
+                        self._cond.notify_all()
+                i = j
         except BaseException as e:
             # fail open: pending reader_for() calls fall back to the shared
             # reader's direct path, which surfaces any real I/O error itself

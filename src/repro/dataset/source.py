@@ -12,7 +12,10 @@ Footer metadata is served from a process-wide cache (``cached_footer``):
 repeated ``dataset()`` opens, the training loader's per-rank construction,
 and ``write_to``'s read side all share one parsed ``FooterView`` per
 unchanged shard, validated by (mtime, size, inode) and counted in
-``IOStats.footer_cache_hits``.
+``IOStats.footer_cache_hits``. Shards may also live in object storage:
+``bullion://bucket/key`` URIs route through ``repro.core.backend`` and
+their footer-cache entries validate by (ETag, length) instead of the stat
+triple.
 """
 
 from __future__ import annotations
@@ -26,9 +29,10 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from ..core import backend as _backend
 from ..core.footer import (MAGIC, FooterView, Sec,
                            register_footer_invalidator, read_footer)
-from ..core.reader import BullionReader, IOStats
+from ..core.reader import BullionReader, IOStats, default_coalesce_gap
 from ..obs import metrics as _metrics
 
 PathSpec = Union[str, Sequence[str]]
@@ -68,7 +72,14 @@ def cached_footer(path: str) -> tuple[FooterView, int, bool]:
     A hit costs one ``stat`` and zero preads; a miss reads and parses the
     footer, then caches it keyed by the file's identity+version so every
     later open of the unchanged file is free. ``FooterView`` is read-only
-    and safe to share across datasets and threads."""
+    and safe to share across datasets and threads.
+
+    ``bullion://`` shards have no ``(mtime, size, inode)`` to validate by:
+    their cache entries are keyed by URI and validated by the object's
+    ``(ETag, length)`` from one HEAD request — a hit costs one HEAD and
+    zero range GETs."""
+    if _backend.is_remote(path):
+        return _cached_footer_remote(path)
     key = os.path.abspath(path)
     val = _footer_validator(path)
     with _footer_cache_lock:
@@ -88,10 +99,31 @@ def cached_footer(path: str) -> tuple[FooterView, int, bool]:
     return fv, off, False
 
 
+def _cached_footer_remote(uri: str) -> tuple[FooterView, int, bool]:
+    with _backend.open_shard(uri) as h:
+        val = h.validator()   # one HEAD: (ETag, length)
+        with _footer_cache_lock:
+            ent = _footer_cache.get(uri)
+            if ent is not None and ent[0] == val:
+                _footer_cache.move_to_end(uri)
+                return ent[1], ent[2], True
+        fv, off = _backend.read_shard_footer(h)
+        # same torn-rewrite guard as the local path: only cache if the
+        # object identity didn't change underneath the read
+        if h.validator() == val:
+            with _footer_cache_lock:
+                _footer_cache[uri] = (val, fv, off)
+                _footer_cache.move_to_end(uri)
+                while len(_footer_cache) > _FOOTER_CACHE_CAP:
+                    _footer_cache.popitem(last=False)
+    return fv, off, False
+
+
 def invalidate_cached_footer(path: str) -> None:
     """Drop one path's cached footer (called by in-process rewriters)."""
+    key = path if _backend.is_remote(path) else os.path.abspath(path)
     with _footer_cache_lock:
-        _footer_cache.pop(os.path.abspath(path), None)
+        _footer_cache.pop(key, None)
 
 
 def clear_footer_cache() -> None:
@@ -114,12 +146,19 @@ def _is_bullion(path: str) -> bool:
 
 
 def discover(spec: PathSpec) -> list[str]:
-    """Resolve a path / directory / glob / explicit list into shard paths."""
+    """Resolve a path / directory / glob / explicit list into shard paths.
+    ``bullion://bucket/key`` URIs pass through to the object-store backend
+    (existence and magic are checked at footer-read time, where missing
+    keys and unreachable endpoints raise ``FileNotFoundError``); lists may
+    mix local paths and URIs."""
     if not isinstance(spec, str):
         paths = [str(p) for p in spec]
         if not paths:
             raise FileNotFoundError("empty dataset path list")
         return paths
+    if _backend.is_remote(spec):
+        _backend.parse_uri(spec)   # malformed URIs fail here, not mid-scan
+        return [spec]
     if os.path.isdir(spec):
         paths = sorted(os.path.join(spec, n) for n in os.listdir(spec)
                        if os.path.isfile(os.path.join(spec, n)))
@@ -241,6 +280,16 @@ class DataSource:
         self._check_valid()
         r = self._readers[shard]
         return r.footer if r is not None else self._footers[shard]
+
+    def shard_coalesce_gap(self, shard: int) -> int:
+        """The run-coalescing gap a shard's reader will use, computed
+        footer-only (no handle opens): the dataset override when given,
+        else the backend default — 64 KiB local, 1 MiB for object-store
+        shards, where hole bytes are cheaper than extra ranged GETs."""
+        if self.coalesce_gap is not None:
+            return int(self.coalesce_gap)
+        return default_coalesce_gap(
+            remote=_backend.is_remote(self.paths[shard]))
 
     def invalidate(self, reason: str) -> None:
         """Mark cached footers stale (a rewrite — e.g. ``delete_where`` —

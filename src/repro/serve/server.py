@@ -137,10 +137,12 @@ class TenantBudget:
 
     A query acquires ``min(requested, depth)`` permits for its whole
     execution, so the sum of in-flight io_depths — and with it the tenant's
-    possible concurrent preads — never exceeds ``depth``. Requests are
-    clamped, never rejected: a single query asking for more than the budget
-    runs at the budget, and one permit is always obtainable, so no query
-    can deadlock itself."""
+    possible concurrent preads *and* concurrent object-store ranges (the
+    held depth is also the scheduler's ``max_in_flight`` for batched remote
+    fetches) — never exceeds ``depth``. Requests are clamped, never
+    rejected: a single query asking for more than the budget runs at the
+    budget, and one permit is always obtainable, so no query can deadlock
+    itself."""
 
     def __init__(self, depth: int):
         if depth < 1:
@@ -209,8 +211,12 @@ class DatasetServer:
 
     # -- datasets ---------------------------------------------------------------
     def attach(self, name: str, spec: PathSpec) -> None:
-        """Register a dataset. Shard footers are parsed at most once here
-        (via the process-wide footer cache) and shared by every session."""
+        """Register a dataset — local paths or ``bullion://bucket/key``
+        object-store URIs (or a mixed list). Shard footers are parsed at
+        most once here (via the process-wide footer cache; remote entries
+        validate by ETag/length) and shared by every session. Remote
+        shards' concurrent in-flight ranges stay bounded by the same
+        per-tenant io_depth budgets that bound local preads."""
         if name in self._sources:
             raise ValueError(f"dataset {name!r} already attached")
         self._sources[name] = DataSource(discover(spec))

@@ -1,0 +1,5 @@
+"""Hermetic test doubles shared by tests, benchmarks, and the quickstart."""
+
+from .objstore import FakeObjectStore
+
+__all__ = ["FakeObjectStore"]

@@ -1,0 +1,388 @@
+"""Storage-backend tests: ``bullion://`` object-store shards end to end.
+
+Everything runs against the in-process ``FakeObjectStore`` (threaded HTTP
+server over a temp directory) so the whole matrix — byte parity with local
+reads, async batched overlap, retry/backoff behavior under injected
+latency / 5xx / truncated-body faults, ETag-validated footer caching, and
+the CLI surfaces — is hermetic.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import backend as _backend
+from repro.core.reader import IOStats
+from repro.core.writer import BullionWriter, ColumnSpec
+from repro.dataset import cached_footer, clear_footer_cache, dataset, discover
+from repro.obs import metrics as _metrics
+from repro.obs import querylog as _querylog
+from repro.obs import trace as _trace
+from repro.scan import C
+from repro.testing import FakeObjectStore
+
+N_SHARDS = 3
+ROWS = 2048
+GROUP = 512
+COLS = ["id", "v", "w"]
+
+
+def _write_bucket(root, *, n_shards=N_SHARDS, rows=ROWS):
+    bucket = os.path.join(root, "bucket")
+    os.makedirs(bucket, exist_ok=True)
+    schema = [ColumnSpec("id", "int64"), ColumnSpec("v", "float32"),
+              ColumnSpec("w", "float32")]
+    paths = []
+    for s in range(n_shards):
+        rng = np.random.default_rng(s)
+        p = os.path.join(bucket, f"part-{s:04d}.bln")
+        w = BullionWriter(p, schema, rows_per_group=GROUP)
+        w.write_table({
+            "id": np.arange(s * rows, (s + 1) * rows, dtype=np.int64),
+            "v": rng.random(rows).astype(np.float32),
+            "w": rng.random(rows).astype(np.float32),
+        })
+        w.close()
+        paths.append(p)
+    return paths
+
+
+@pytest.fixture
+def store(tmp_path):
+    """A running fake object store over a freshly written bucket, already
+    configured as the process endpoint; undone (and the footer cache
+    cleared) on teardown."""
+    paths = _write_bucket(str(tmp_path))
+    clear_footer_cache()
+    with FakeObjectStore(str(tmp_path)) as s:
+        _backend.configure_object_store(s.endpoint)
+        s.local_paths = paths
+        s.uris = [f"bullion://bucket/part-{i:04d}.bln"
+                  for i in range(len(paths))]
+        try:
+            yield s
+        finally:
+            _backend.configure_object_store(None)
+            clear_footer_cache()
+
+
+def _counter(name):
+    return _metrics.counter(name).value
+
+
+# ---------------------------------------------------------------------------
+# byte parity + accounting
+# ---------------------------------------------------------------------------
+
+def test_remote_reads_byte_identical_to_local(store):
+    with dataset(store.local_paths) as ds:
+        local = ds.select(COLS).to_table()
+    for depth in (1, 4):
+        clear_footer_cache()
+        with dataset(store.uris) as ds:
+            remote = ds.select(COLS).to_table(io_depth=depth)
+            st = ds.stats
+        for c in COLS:
+            assert local[c].tobytes() == remote[c].tobytes(), (depth, c)
+        # remote I/O is charged to the backend counters, never to the
+        # local-pread ones bench accounting relies on
+        assert st.preads == 0
+        assert st.backend_fetches > 0
+        assert st.bytes_read > 0
+
+
+def test_remote_predicate_and_head_match_local(store):
+    victim = ROWS + GROUP // 2
+    with dataset(store.local_paths) as ds:
+        l_pred = ds.where(C("id") >= victim).select(["id", "v"]).to_table()
+        l_head = ds.select(["id"]).head(700).to_table()
+    with dataset(store.uris) as ds:
+        r_pred = ds.where(C("id") >= victim).select(["id", "v"]) \
+            .to_table(io_depth=3)
+        r_head = ds.select(["id"]).head(700).to_table(io_depth=3)
+    assert l_pred["id"].tobytes() == r_pred["id"].tobytes()
+    assert l_pred["v"].tobytes() == r_pred["v"].tobytes()
+    assert l_head["id"].tobytes() == r_head["id"].tobytes()
+
+
+def test_mixed_local_and_remote_shard_list(store):
+    spec = [store.local_paths[0], *store.uris[1:]]
+    with dataset(store.local_paths) as ds:
+        local = ds.select(COLS).to_table()
+    with dataset(spec) as ds:
+        mixed = ds.select(COLS).to_table(io_depth=4)
+        st = ds.stats
+    for c in COLS:
+        assert local[c].tobytes() == mixed[c].tobytes(), c
+    assert st.preads > 0 and st.backend_fetches > 0
+
+
+# ---------------------------------------------------------------------------
+# async batched overlap + speedup
+# ---------------------------------------------------------------------------
+
+def test_async_batcher_overlaps_and_beats_serialized(store):
+    # 8 groups per shard: at io_depth=8 the remote run-span cap (depth//2)
+    # splits each shard into >= 2 runs, so a batch really holds concurrent
+    # ranges (4-group shards collapse to one run each and would serialize)
+    _write_bucket(store.root, rows=8 * GROUP)
+    clear_footer_cache()
+    store.latency = 0.02
+    with dataset(store.uris) as ds:      # warm the remote footer cache
+        ds.select(["id"]).head(1).to_table()
+
+    t0 = time.perf_counter()
+    with dataset(store.uris) as ds:
+        serial = ds.select(COLS).to_table(io_depth=1)
+    t_serial = time.perf_counter() - t0
+
+    store.max_in_flight = 0
+    t0 = time.perf_counter()
+    with dataset(store.uris) as ds:
+        batched = ds.select(COLS).to_table(io_depth=8)
+    t_batched = time.perf_counter() - t0
+
+    for c in COLS:
+        assert serial[c].tobytes() == batched[c].tobytes(), c
+    assert store.max_in_flight >= 2, \
+        f"expected overlapped ranges, store saw {store.max_in_flight}"
+    assert t_batched * 2 <= t_serial, \
+        f"batched {t_batched * 1e3:.0f}ms vs serial {t_serial * 1e3:.0f}ms"
+
+
+# ---------------------------------------------------------------------------
+# errors: missing keys, unreachable stores, malformed URIs
+# ---------------------------------------------------------------------------
+
+def test_missing_key_raises_filenotfound(store):
+    with pytest.raises(FileNotFoundError, match="not found"):
+        with dataset("bullion://bucket/nope.bln"):
+            pass
+
+
+def test_unreachable_endpoint_raises_filenotfound(store):
+    _backend.configure_object_store("http://127.0.0.1:9")   # discard port
+    with pytest.raises(FileNotFoundError, match="unreachable"):
+        with dataset(store.uris[0]):
+            pass
+
+
+def test_no_endpoint_configured_raises_filenotfound(store, monkeypatch):
+    _backend.configure_object_store(None)
+    monkeypatch.delenv("BULLION_OBJECT_STORE", raising=False)
+    with pytest.raises(FileNotFoundError, match="endpoint"):
+        with dataset(store.uris[0]):
+            pass
+
+
+def test_malformed_uri_rejected_at_discover(store):
+    with pytest.raises(ValueError, match="bullion://bucket/key"):
+        discover("bullion://only-a-bucket")
+
+
+# ---------------------------------------------------------------------------
+# fault injection: 5xx, truncation, backoff caps, exhausted retries
+# ---------------------------------------------------------------------------
+
+def _warm_remote(store):
+    """Scan once so every shard's footer is cached before faults are queued
+    (footer-tail GETs carry Range headers and would consume them)."""
+    with dataset(store.uris) as ds:
+        ds.select(["id"]).to_table()
+
+
+def test_5xx_retries_then_succeeds(store, monkeypatch):
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF", "0.001")
+    _warm_remote(store)
+    before = _counter("bullion.backend.retries")
+    store.inject(count=2, status=503)
+    with dataset(store.uris) as ds:
+        tbl = ds.select(COLS).to_table(io_depth=1)
+        st = ds.stats
+    assert len(tbl["id"]) == N_SHARDS * ROWS
+    assert st.backend_retries >= 2
+    assert _counter("bullion.backend.retries") - before >= 2
+
+
+@pytest.mark.parametrize("depth", [1, 4])
+def test_truncated_body_retries_transparently(store, monkeypatch, depth):
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF", "0.001")
+    _warm_remote(store)
+    with dataset(store.local_paths) as ds:
+        local = ds.select(COLS).to_table()
+    store.inject(count=2, truncate=0.5)
+    with dataset(store.uris) as ds:
+        tbl = ds.select(COLS).to_table(io_depth=depth)
+        st = ds.stats
+    for c in COLS:
+        assert local[c].tobytes() == tbl[c].tobytes(), c
+    assert st.backend_retries >= 2
+    store.clear_faults()
+
+
+def test_retry_backoff_is_capped(store, monkeypatch):
+    # uncapped exponential would sleep ~0.2 + 0.4 + 0.8 s; the cap clamps
+    # every delay to 50 ms (±25% jitter), so three retries stay well under
+    monkeypatch.setenv("BULLION_BACKEND_RETRIES", "3")
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF", "0.2")
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF_CAP", "0.05")
+    _warm_remote(store)
+    store.inject(count=3, status=503)
+    t0 = time.perf_counter()
+    with dataset(store.uris) as ds:
+        tbl = ds.select(["id"]).to_table(io_depth=1)
+    elapsed = time.perf_counter() - t0
+    assert len(tbl["id"]) == N_SHARDS * ROWS
+    assert elapsed < 0.8, f"backoff cap not honored: {elapsed:.2f}s"
+
+
+def test_exhausted_retries_fall_back_per_run_then_succeed(store, monkeypatch):
+    """A failed batched run fails only the tasks it covered: they fall back
+    to direct reads (which see a drained fault queue here) and the query
+    still returns correct bytes."""
+    monkeypatch.setenv("BULLION_BACKEND_RETRIES", "0")   # any fault exhausts
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF", "0.001")
+    _warm_remote(store)
+    with dataset(store.local_paths) as ds:
+        local = ds.select(COLS).to_table()
+    store.inject(count=1, status=503)
+    with dataset(store.uris) as ds:
+        tbl = ds.select(COLS).to_table(io_depth=8)
+    for c in COLS:
+        assert local[c].tobytes() == tbl[c].tobytes(), c
+
+
+def test_exhausted_retries_fail_query_with_log_record(store, monkeypatch):
+    monkeypatch.setenv("BULLION_BACKEND_RETRIES", "1")
+    monkeypatch.setenv("BULLION_BACKEND_BACKOFF", "0.001")
+    _warm_remote(store)
+    store.inject(count=500, status=503)   # persistent: fallbacks fail too
+    _querylog.enable_local(True)
+    try:
+        base = _querylog.LOG.total
+        with pytest.raises(OSError):
+            with dataset(store.uris) as ds:
+                ds.select(COLS).to_table(io_depth=1)
+        recs = [r for r in _querylog.LOG.records() if r.outcome == "error"]
+        assert _querylog.LOG.total > base
+        assert recs and "503" in (recs[-1].error or "")
+    finally:
+        _querylog.enable_local(False)
+        store.clear_faults()
+
+
+# ---------------------------------------------------------------------------
+# remote footer cache: URI keys, (ETag, length) validation
+# ---------------------------------------------------------------------------
+
+def test_remote_footer_cache_hits_by_etag(store):
+    uri = store.uris[0]
+    fv1, off1, hit1 = cached_footer(uri)
+    assert not hit1
+    ranges_after_miss = store.range_requests
+    fv2, off2, hit2 = cached_footer(uri)
+    assert hit2 and fv2 is fv1 and off2 == off1
+    # a hit costs HEAD(s) only — no new range GETs
+    assert store.range_requests == ranges_after_miss
+
+    with dataset(store.uris) as ds:
+        ds.select(["id"]).head(1).to_table()
+    with dataset(store.uris) as ds:
+        ds.select(["id"]).head(1).to_table()
+        assert ds.stats.footer_cache_hits == len(store.uris)
+
+
+def test_remote_footer_cache_invalidates_on_rewrite(store):
+    uri = store.uris[0]
+    path = store.local_paths[0]
+    _, _, hit = cached_footer(uri)
+    assert not hit
+    _, _, hit = cached_footer(uri)
+    assert hit
+    # rewrite the object: ETag (mtime+size) changes, entry must invalidate
+    _write_bucket(os.path.dirname(os.path.dirname(path)), n_shards=1,
+                  rows=ROWS + GROUP)
+    fv, _, hit = cached_footer(uri)
+    assert not hit
+    assert fv.num_rows == ROWS + GROUP
+
+
+# ---------------------------------------------------------------------------
+# CLI over URIs
+# ---------------------------------------------------------------------------
+
+def test_cli_inspect_and_fsck_accept_uris(store, capsys):
+    from repro.cli import main
+    assert main(["inspect", "--pages", store.uris[0]]) == 0
+    out = capsys.readouterr().out
+    assert store.uris[0] in out and "group 0:" in out
+    assert main(["fsck", "-v", store.uris[0]]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+
+def test_cli_reports_missing_remote_objects(store, capsys):
+    from repro.cli import main
+    assert main(["inspect", "bullion://bucket/missing.bln"]) == 2
+    err = capsys.readouterr().err
+    assert "not found" in err
+    assert main(["fsck", "bullion://bucket/missing.bln"]) == 1
+    out = capsys.readouterr().out
+    assert "unreadable footer" in out
+
+
+# ---------------------------------------------------------------------------
+# IOStats plumbing for the backend counters
+# ---------------------------------------------------------------------------
+
+def test_backend_counters_flow_through_merge_sum_delta():
+    a = IOStats(backend_fetches=2, backend_retries=1, backend_wasted_bytes=10)
+    b = IOStats(backend_fetches=3, backend_wasted_bytes=5)
+    total = IOStats.sum([a, b])
+    assert (total.backend_fetches, total.backend_retries,
+            total.backend_wasted_bytes) == (5, 1, 15)
+    d = total.delta(a)
+    assert (d.backend_fetches, d.backend_retries,
+            d.backend_wasted_bytes) == (3, 0, 5)
+
+
+def test_remote_coalescing_charges_backend_wasted_bytes(store):
+    # skip the middle column: the unread "v" pages sit between wanted "id"
+    # and "w" pages, and a huge gap coalesces ranges right across them
+    with dataset(store.uris, coalesce_gap=4 * 1024 * 1024) as ds:
+        ds.select(["id", "w"]).to_table(io_depth=1)
+        st = ds.stats
+    assert st.coalesced_preads > 0
+    assert st.backend_wasted_bytes > 0
+    assert st.wasted_bytes == 0       # hole bytes stay in the remote bucket
+
+
+# ---------------------------------------------------------------------------
+# satellite: partial-prefetch reconciliation (PrefetchReader fallback)
+# ---------------------------------------------------------------------------
+
+def test_partial_prefetch_reconciliation_local(tmp_path):
+    """With a predicate gating payload reads, only predicate pages are
+    prefetched; payload pages go through the PrefetchReader fallback. The
+    fallback charges preads/coalesced_preads exactly like the serial path,
+    so decode-span pages reconcile with the IOStats delta."""
+    paths = _write_bucket(str(tmp_path), n_shards=1)
+    clear_footer_cache()
+    before_fb = _metrics.counter("bullion.io.prefetch_fallback_pages").value
+    with dataset(paths) as ds:
+        before = ds.stats
+        with _trace.collect() as tr:
+            ds.where(C("id") >= GROUP).select(COLS).to_table(io_depth=3)
+        st = ds.stats.delta(before)
+    pages = sum(s.args.get("pages", 0) for s in tr.spans
+                if s.name == "decode.pread")
+    span_bytes = sum(s.args.get("bytes", 0) for s in tr.spans
+                     if s.name == "decode.pread")
+    footer_preads = 2 if st.footer_bytes else 0
+    assert pages == (st.preads - footer_preads) + st.coalesced_preads
+    assert span_bytes + st.wasted_bytes == st.bytes_read - st.footer_bytes
+    fallback = _metrics.counter("bullion.io.prefetch_fallback_pages").value \
+        - before_fb
+    assert fallback > 0, "predicate plan should exercise the fallback path"
