@@ -41,15 +41,19 @@ STAT_FIELDS = {
     "backend_fetches": "backend_fetches",
     "backend_retries": "backend_retries",
     "backend_wasted_bytes": "backend_wasted_bytes",
+    "pages_verified": "pages_verified",
+    "checksum_failures": "checksum_failures",
+    "pages_quarantined": "pages_quarantined",
+    "degraded_rows": "degraded_rows",
 }
 STAT_COLUMNS = tuple(STAT_FIELDS)
 
 
 def main(argv=None) -> None:
-    from . import (bench_cascade, bench_compact, bench_deletion, bench_io,
-                   bench_metadata, bench_multimodal, bench_projection,
-                   bench_quantization, bench_roofline, bench_scan,
-                   bench_serve, bench_sparse_delta)
+    from . import (bench_cascade, bench_chaos, bench_compact, bench_deletion,
+                   bench_io, bench_metadata, bench_multimodal,
+                   bench_projection, bench_quantization, bench_roofline,
+                   bench_scan, bench_serve, bench_sparse_delta)
 
     ap = argparse.ArgumentParser(description="Bullion benchmark suites")
     ap.add_argument("--only", default=None,
@@ -98,6 +102,7 @@ def main(argv=None) -> None:
         ("scan      (zone maps / pushdown)", bench_scan),
         ("compact   (write_to sink / recluster)", bench_compact),
         ("io        (pipelined scheduler / footer cache)", bench_io),
+        ("chaos     (self-healing read path)", bench_chaos),
         ("serve     (dataset service / bloom probes)", bench_serve),
         ("roofline  (dry-run artifacts)", bench_roofline),
     ]

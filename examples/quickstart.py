@@ -8,7 +8,10 @@ read the same shards back from an (in-process) object store via
 ``bullion://`` URIs, then stand them up behind the multi-tenant dataset
 service
 (``repro.serve.DatasetServer``: prepared plans, admission control, and
-bloom-sketch point lookups on unclustered columns).
+bloom-sketch point lookups on unclustered columns), and finally survive
+injected bit rot on the self-healing read path (decode-time checksum
+verification, page quarantine + skip degradation, in-process repair
+pickup).
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -330,12 +333,59 @@ def main(out_dir=None):
 
     # the bullion CLI reads it all back: `inspect` dumps a shard's anatomy,
     # `fsck` re-verifies page checksums, Merkle bounds, deletion vectors,
-    # zone maps and sketches (exit 0 = clean, 1 = corruption)
+    # zone maps and sketches (exit 0 = clean, 1 = corruption, 2 = unusable
+    # torn file; --json emits per-category counts for machines)
     from repro import cli as bullion_cli
     rc = bullion_cli.main(["fsck", "-v", path, shard_dir, compact_dir])
     assert rc == 0, "fsck found corruption in freshly written datasets"
     print("bullion fsck: every page checksum, Merkle bound, deletion "
           "vector, zone map and sketch verified (exit 0)")
+
+    # --- durability: the self-healing read path ------------------------------
+    # fsck is the offline story; the live reader defends itself too.
+    # Decode-time verification (BULLION_VERIFY=off|sample|full, default
+    # sample: each page hashed once per cached footer) checks page bytes
+    # against the footer checksums *before* decode; a mismatch gets one
+    # re-read, and only a persistent mismatch quarantines the page.
+    # BULLION_ON_CORRUPT picks the failure mode: raise (default, names
+    # shard/group/page), skip (drop the page's rows, exact degraded-row
+    # accounting), or mask (shape-stable zero fill). Writes are crash-safe:
+    # shards materialize under path+".tmp" and os.replace() in after fsync,
+    # so kill -9 mid-write leaves nothing dataset() can see. This demo
+    # corrupts a copy in durability/ — deliberately outside the
+    # directories fsck'd above.
+    from repro.core import integrity
+    from repro.core.footer import read_footer
+    dur_dir = os.path.join(td, "durability")
+    os.makedirs(dur_dir, exist_ok=True)
+    dur = os.path.join(dur_dir, "flaky.bln")
+    write_shard(dur, n // 10)
+    fv, _ = read_footer(dur)
+    off_b, size_b = fv.page_extent(0)
+    with open(dur, "r+b") as f:                      # simulated bit rot
+        f.seek(off_b + size_b // 2)
+        bit = f.read(1)
+        f.seek(off_b + size_b // 2)
+        f.write(bytes([bit[0] ^ 0xFF]))
+    integrity.set_verify_policy("full")
+    integrity.set_corruption_policy("skip")
+    try:
+        with dataset(dur) as ds:
+            tbl = ds.select(["user_id"]).to_table()
+            st = ds.stats
+        q = integrity.QUARANTINE.summary()["quarantined_pages"]
+        print(f"bit rot survived: served {len(tbl['user_id'])} rows, "
+              f"dropped {st.degraded_rows} from {q} quarantined page(s)")
+        write_shard(dur, n // 10)                    # out-of-band repair
+        with dataset(dur) as ds:
+            healed = len(ds.select(["user_id"]).to_table()["user_id"])
+        assert healed == n // 10
+        print(f"repair picked up without restart: {healed} rows clean "
+              "(footer cache revalidated, quarantine self-invalidated)")
+    finally:
+        integrity.set_verify_policy(None)
+        integrity.set_corruption_policy(None)
+        integrity.QUARANTINE.clear()
 
 
 if __name__ == "__main__":

@@ -12,9 +12,12 @@ Run as ``python -m repro.cli <command>``:
   the Merkle group/root bounds, deletion-vector soundness (extent bounds,
   compacted-page row accounting), zone-map consistency (decoded values
   inside recorded min/max), and sketch consistency (no false negatives).
-  Exit code 0 = clean, 1 = corruption found, 2 = unusable input. Checks
-  gate on section presence, so v0 (stat-less) through v3 (sketched) files
-  all verify.
+  Exit code 0 = clean, 1 = content corruption found, 2 = unusable input
+  (a torn or truncated shard the reader refuses to open, or a path that
+  resolves to nothing). Checks gate on section presence, so v0
+  (stat-less) through v3 (sketched) files all verify. ``--json`` emits a
+  machine-readable report: per-shard, per-category check/failure counts
+  with first-failure locations, plus the would-be exit code.
 * ``log [PATH.jsonl]`` — pretty-print query-log records from a
   ``BULLION_QUERY_LOG`` JSONL sink, or ``--socket`` to pull the bounded
   ring from a live server.
@@ -38,7 +41,8 @@ import numpy as np
 
 from .core.backend import open_shard
 from .core.encodings import blob_encoding_name
-from .core.footer import ColKind, PageType, Sec, read_footer
+from .core.footer import ColKind, PageType, Sec, ShardCorruptError, \
+    read_footer
 from .core.merkle import combine, page_hash
 from .core.quantization import QUANT_DTYPE, QuantMode, QuantSpec, dequantize
 from .core import pages as pages_mod
@@ -207,23 +211,48 @@ class _Fsck:
         self.path = path
         self.errors: list[str] = []
         self.checks = 0
+        self.failures = 0
+        self.unusable: Optional[str] = None
+        self.cats: dict[str, dict] = {}
         self.max_errors = max_errors
 
-    def fail(self, msg: str) -> None:
+    def _cat(self, cat: str) -> dict:
+        return self.cats.setdefault(
+            cat, {"checks": 0, "failed": 0, "first_failure": None})
+
+    def fail(self, msg: str, cat: str = "structure") -> None:
+        self.failures += 1
+        d = self._cat(cat)
+        d["failed"] += 1
+        if d["first_failure"] is None:
+            d["first_failure"] = msg
         if len(self.errors) < self.max_errors:
             self.errors.append(f"{self.path}: {msg}")
 
-    def check(self, ok: bool, msg: str) -> bool:
+    def check(self, ok: bool, msg: str, cat: str = "structure") -> bool:
         self.checks += 1
+        self._cat(cat)["checks"] += 1
         if not ok:
-            self.fail(msg)
+            self.fail(msg, cat=cat)
         return ok
+
+    def report(self) -> dict:
+        """Machine-readable summary for ``fsck --json``."""
+        return {"path": self.path, "checks": self.checks,
+                "failures": self.failures, "unusable": self.unusable,
+                "categories": self.cats, "errors": list(self.errors)}
 
     def run(self) -> None:
         try:
             fv, foot_off = read_footer(self.path)
+        except ShardCorruptError as e:
+            # the reader refuses to open this file at all (torn write,
+            # truncated footer, bad magic): unusable, not merely corrupt
+            self.unusable = str(e)
+            self.fail(f"unusable: {e}", cat="open")
+            return
         except (OSError, ValueError) as e:
-            self.fail(f"unreadable footer: {e}")
+            self.fail(f"unreadable footer: {e}", cat="open")
             return
         offs = fv.arr(Sec.PAGE_OFFSET, np.uint64)
         sizes = fv.arr(Sec.PAGE_SIZE, np.uint64)
@@ -245,12 +274,12 @@ class _Fsck:
                 if not self.check(
                         0 <= off and off + size <= foot_off,
                         f"page {p}: extent [{off}, {off + size}) outside "
-                        f"data region [0, {foot_off})"):
+                        f"data region [0, {foot_off})", cat="extents"):
                     continue
                 try:
                     blob = h.pread(off, size)
                 except OSError as e:
-                    self.fail(f"page {p}: unreadable: {e}")
+                    self.fail(f"page {p}: unreadable: {e}", cat="extents")
                     continue
                 raw_pages[p] = blob
                 if cksums is not None:
@@ -258,7 +287,7 @@ class _Fsck:
                         page_hash(blob) == int(cksums[p]),
                         f"page {p}: checksum mismatch (stored "
                         f"{int(cksums[p]):#018x}, computed "
-                        f"{page_hash(blob):#018x})")
+                        f"{page_hash(blob):#018x})", cat="checksums")
         if cksums is not None and fv.has(Sec.GROUP_CHECKSUM):
             gsum = fv.arr(Sec.GROUP_CHECKSUM, np.uint64)
             gps = fv.group_page_start()
@@ -267,11 +296,12 @@ class _Fsck:
                 want = combine(cksums[int(gps[g]):int(gps[g + 1])])
                 if not self.check(
                         want == int(gsum[g]),
-                        f"group {g}: Merkle checksum mismatch"):
+                        f"group {g}: Merkle checksum mismatch",
+                        cat="merkle"):
                     groups_ok = False
             if groups_ok:
                 self.check(combine(gsum) == fv.file_checksum,
-                           "file Merkle root mismatch")
+                           "file Merkle root mismatch", cat="merkle")
 
         # -- deletion vectors ----------------------------------------------
         dv_data = len(fv.raw(Sec.DV_DATA)) if fv.has(Sec.DV_DATA) else 0
@@ -289,7 +319,8 @@ class _Fsck:
                         and int(dvl[p]) >= need,
                         f"page {p}: deletion vector extent "
                         f"[{int(dvo[p])}, +{int(dvl[p])}) unsound for "
-                        f"{int(prows[p])} rows (DV_DATA {dv_data}B)"):
+                        f"{int(prows[p])} rows (DV_DATA {dv_data}B)",
+                        cat="deletion_vectors"):
                     dvs[p] = None
                     continue
                 dvs[p] = fv.deletion_vector(p)
@@ -299,7 +330,7 @@ class _Fsck:
             if int(flags[p]) & _COMPACTED:
                 self.check(dvs.get(p) is not None,
                            f"page {p}: COMPACTED flag without a deletion "
-                           f"vector")
+                           f"vector", cat="deletion_vectors")
 
         # -- decode + zone maps + sketches ---------------------------------
         kinds = fv.arr(Sec.COL_KIND, np.uint8)
@@ -334,7 +365,8 @@ class _Fsck:
         try:
             decoded = self._decode(flag, blob)
         except Exception as e:
-            self.fail(f"page {p}: decode failed: {type(e).__name__}: {e}")
+            self.fail(f"page {p}: decode failed: {type(e).__name__}: {e}",
+                      cat="decode")
             return None
         # row accounting: a compacted page physically stores only the
         # survivors; anything else stores the raw row count
@@ -344,7 +376,7 @@ class _Fsck:
         self.check(len(decoded) == expect,
                    f"page {p}: decoded {len(decoded)} rows, footer says "
                    f"{expect} ({'compacted' if flag & _COMPACTED else 'raw'}"
-                   f" of {rows})")
+                   f" of {rows})", cat="decode")
         kind = int(kinds[c])
         if kind == int(ColKind.STRING):
             return None                      # no numeric domain to verify
@@ -364,7 +396,8 @@ class _Fsck:
             amin, amax = float(finite.min()), float(finite.max())
             self.check(amin >= lo and amax <= hi,
                        f"page {p}: zone map [{lo:g}, {hi:g}] excludes "
-                       f"decoded range [{amin:g}, {amax:g}]")
+                       f"decoded range [{amin:g}, {amax:g}]",
+                       cat="zone_maps")
         sk = fv.page_sketch(p)
         if sk is not None and len(finite):
             self._check_sketch(sk, finite, f"page {p}")
@@ -380,10 +413,12 @@ class _Fsck:
             uniq = uniq[idx]
         for v in uniq:
             self.checks += 1
+            self._cat("sketches")["checks"] += 1
             if not sk.may_contain(float(v)):
                 self.fail(f"{what}: sketch false negative for value "
                           f"{float(v):g} (key "
-                          f"{int(canonical_u64(float(v)))})")
+                          f"{int(canonical_u64(float(v)))})",
+                          cat="sketches")
                 return
 
     def _check_chunks(self, fv, chunk_vals, cstats, pstats, quants,
@@ -399,36 +434,53 @@ class _Fsck:
                 self.check(
                     amin >= lo and amax <= hi,
                     f"chunk (g={g}, c={c}): zone map [{lo:g}, {hi:g}] "
-                    f"excludes decoded range [{amin:g}, {amax:g}]")
+                    f"excludes decoded range [{amin:g}, {amax:g}]",
+                    cat="zone_maps")
             sk = fv.chunk_sketch(g, c)
             if sk is not None:
                 self._check_sketch(sk, vals, f"chunk (g={g}, c={c})")
 
 
 def cmd_fsck(args) -> int:
+    as_json = getattr(args, "json", False)
     try:
         paths = _paths(args.path)
     except (FileNotFoundError, ValueError) as e:
-        print(f"bullion fsck: {e}", file=sys.stderr)
+        if as_json:
+            print(json.dumps({"shards": [], "errors": 0, "unusable": 1,
+                              "exit": 2, "error": str(e)}))
+        else:
+            print(f"bullion fsck: {e}", file=sys.stderr)
         return 2
     total_errors = 0
+    unusable = 0
+    reports: list[dict] = []
     for path in paths:
         f = _Fsck(path, max_errors=args.max_errors)
         f.run()
-        total_errors += len(f.errors)
+        reports.append(f.report())
+        total_errors += f.failures
+        unusable += 1 if f.unusable else 0
+        if as_json:
+            continue
         for err in f.errors:
             print(f"CORRUPT  {err}")
-        if args.verbose or f.errors:
-            state = "CORRUPT" if f.errors else "clean"
+        if args.verbose or f.failures:
+            state = "UNUSABLE" if f.unusable else \
+                ("CORRUPT" if f.failures else "clean")
             print(f"{path}: {state} ({f.checks} check(s), "
-                  f"{len(f.errors)} error(s))")
+                  f"{f.failures} error(s))")
+    code = 2 if unusable else (1 if total_errors else 0)
+    if as_json:
+        print(json.dumps({"shards": reports, "errors": total_errors,
+                          "unusable": unusable, "exit": code}, indent=2))
+        return code
     if total_errors:
         print(f"bullion fsck: {total_errors} error(s) across "
               f"{len(paths)} shard(s)")
-        return 1
-    if args.verbose:
+    elif args.verbose:
         print(f"bullion fsck: {len(paths)} shard(s) clean")
-    return 0
+    return code
 
 
 # ---------------------------------------------------------------------------
@@ -515,6 +567,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--verbose", "-v", action="store_true")
     p.add_argument("--max-errors", type=int, default=50,
                    help="stop collecting per-shard findings after N")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable report: per-shard, per-category "
+                        "check/failure counts + first failures")
     p.set_defaults(fn=cmd_fsck)
 
     p = sub.add_parser("log", help="pretty-print query-log records")

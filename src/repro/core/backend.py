@@ -615,12 +615,35 @@ _backends: dict[str, StorageBackend] = {}
 _backends_lock = threading.Lock()
 
 
-def register_backend(scheme: str, backend: StorageBackend) -> None:
-    """Override the backend used for ``scheme://`` URIs (tests, custom
-    stores). Register ``None`` semantics are not supported; use a fresh
-    ``ObjectStoreBackend()`` to restore defaults."""
+def register_backend(scheme: str, backend: StorageBackend) -> Optional[StorageBackend]:
+    """Override the backend used for a scheme (tests, custom stores, the
+    chaos fault-injection harness). ``"bullion"`` covers remote URIs;
+    ``"file"`` covers plain local paths. Returns the previously registered
+    backend (``None`` when the built-in default was active) so callers can
+    restore it via ``unregister_backend(scheme, restore=prev)``."""
     with _backends_lock:
+        prev = _backends.get(scheme)
         _backends[scheme] = backend
+        return prev
+
+
+def unregister_backend(scheme: str, *,
+                       restore: Optional[StorageBackend] = None) -> None:
+    """Drop a scheme override (or put back ``restore``, a previous
+    ``register_backend`` return value)."""
+    with _backends_lock:
+        if restore is None:
+            _backends.pop(scheme, None)
+        else:
+            _backends[scheme] = restore
+
+
+def has_custom_local_backend() -> bool:
+    """True while a ``file``-scheme override is registered — local footer
+    reads then route through the backend protocol so fault injection sees
+    them."""
+    with _backends_lock:
+        return "file" in _backends
 
 
 def backend_for(path: str) -> StorageBackend:
@@ -628,7 +651,9 @@ def backend_for(path: str) -> StorageBackend:
         with _backends_lock:
             be = _backends.get("bullion")
         return be if be is not None else ObjectStoreBackend()
-    return _LOCAL
+    with _backends_lock:
+        be = _backends.get("file")
+    return be if be is not None else _LOCAL
 
 
 def open_shard(path: str) -> ShardHandle:
@@ -643,21 +668,25 @@ def read_shard_footer(handle: ShardHandle, *,
     the 16-byte trailer and (in practice) the whole footer; a second exact
     range read happens only when the footer outgrows the speculation.
     Returns ``(FooterView, footer_offset)`` like ``read_footer``."""
-    from .footer import _TAIL, MAGIC, FooterView
+    from .footer import _TAIL, MAGIC, ShardCorruptError, parse_footer
     tail = handle.footer_tail(max(_TAIL.size, int(speculative_tail)))
     if len(tail) < _TAIL.size:
-        raise ValueError(f"{handle.uri}: not a Bullion file (too small)")
+        raise ShardCorruptError(
+            handle.uri,
+            f"object too small ({len(tail)} byte(s)) for a Bullion tail")
     flen, magic = _TAIL.unpack(tail[-_TAIL.size:])
     if magic != MAGIC:
-        raise ValueError(f"{handle.uri}: not a Bullion file")
+        raise ShardCorruptError(
+            handle.uri, "bad magic (not a Bullion object, or a torn write)")
     size = handle.size()
     foot_off = size - _TAIL.size - flen
     if foot_off < 0:
-        raise ValueError(
-            f"{handle.uri}: corrupt footer length {flen} exceeds "
-            f"object size {size}")
+        raise ShardCorruptError(
+            handle.uri,
+            f"footer length {flen} exceeds object size {size} "
+            "(truncated write)")
     if flen + _TAIL.size <= len(tail):
         buf = tail[len(tail) - _TAIL.size - flen: len(tail) - _TAIL.size]
     else:
         buf = handle.pread(foot_off, flen)
-    return FooterView(bytes(buf)), foot_off
+    return parse_footer(bytes(buf), foot_off, handle.uri), foot_off

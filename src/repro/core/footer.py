@@ -29,6 +29,27 @@ MAGIC = b"BULLION1"
 _DIR_ENTRY = struct.Struct("<HQQ")
 _TAIL = struct.Struct("<Q8s")
 
+
+class ShardCorruptError(ValueError):
+    """A shard failed structural validation (torn write, bad magic,
+    truncated data region) or decode-time checksum verification.
+
+    Subclasses ``ValueError`` so pre-existing ``except (OSError,
+    ValueError)`` handlers keep treating corrupt shards as unreadable
+    input; new code catches the typed error and reads ``path`` /
+    ``reason`` / ``group`` / ``page`` directly."""
+
+    def __init__(self, path: str, reason: str, *,
+                 group: int | None = None, page: int | None = None):
+        self.path = str(path)
+        self.reason = reason
+        self.group = group
+        self.page = page
+        loc = ""
+        if group is not None or page is not None:
+            loc = f" (group {group}, page {page})"
+        super().__init__(f"{self.path}: corrupt shard{loc}: {reason}")
+
 # Format versions (META word 7). Readers never gate on the version number —
 # capabilities are detected by section presence (``has``) — so every older
 # file remains fully readable: v0 files lack stats sections and never prune,
@@ -303,22 +324,85 @@ def notify_footer_rewrite(path: str) -> None:
         fn(path)
 
 
+def parse_footer(buf: bytes | memoryview, foot_off: int,
+                 path: str) -> FooterView:
+    """Construct a ``FooterView`` with torn-write structural validation.
+
+    A crash mid-write (or a truncating copy) can leave a tail whose
+    ``footer_len`` points at arbitrary bytes; naive ``FooterView``
+    construction then produces struct-unpack garbage or views into
+    nonsense extents. Every entry point that trusts a footer — local
+    ``read_footer``, the backend's speculative-tail read — funnels
+    through here so a torn file of any format version (v0–v3) surfaces
+    as a typed ``ShardCorruptError`` instead."""
+    if len(buf) < 4:
+        raise ShardCorruptError(
+            path, f"footer too small ({len(buf)} byte(s))")
+    (n_sections,) = struct.unpack_from("<I", buf, len(buf) - 4)
+    dir_bytes = n_sections * _DIR_ENTRY.size
+    if dir_bytes + 4 > len(buf):
+        raise ShardCorruptError(
+            path, f"footer directory ({n_sections} section(s)) exceeds "
+                  f"footer size {len(buf)}")
+    try:
+        fv = FooterView(buf)
+    except (struct.error, ValueError) as e:  # pragma: no cover - belt
+        raise ShardCorruptError(path, f"footer parse failed: {e}") from None
+    payload_end = len(fv._buf) - 4 - dir_bytes
+    for sid, (off, size) in fv._dir.items():
+        if off < 0 or size < 0 or off + size > payload_end:
+            raise ShardCorruptError(
+                path, f"section {sid} extent [{off}, +{size}) outside "
+                      f"footer payload [0, {payload_end})")
+    if not fv.has(Sec.META) or len(fv.raw(Sec.META)) < 64:
+        raise ShardCorruptError(path, "META section missing or short")
+    if fv.has(Sec.PAGE_OFFSET) and fv.has(Sec.PAGE_SIZE):
+        offs = fv.arr(Sec.PAGE_OFFSET, np.uint64)
+        sizes = fv.arr(Sec.PAGE_SIZE, np.uint64)
+        if len(offs) != len(sizes):
+            raise ShardCorruptError(
+                path, "PAGE_OFFSET / PAGE_SIZE length mismatch")
+        if len(offs):
+            # guard the uint64 add against wrap before trusting max()
+            if int(offs.max()) > foot_off or int(sizes.max()) > foot_off:
+                raise ShardCorruptError(
+                    path, "data region truncated: page extent beyond the "
+                          f"footer offset {foot_off}")
+            end = int((offs + sizes).max())
+            if end > foot_off:
+                raise ShardCorruptError(
+                    path, f"data region truncated: page data ends at {end} "
+                          f"but the data region is [0, {foot_off})")
+    return fv
+
+
 def read_footer(path: str) -> tuple[FooterView, int]:
     """Read footer with two preads (tail, then footer) — the paper's access
     pattern. Returns (view, footer_offset). ``bullion://`` URIs route
     through their storage backend (one speculative tail GET) instead of the
-    local filesystem."""
+    local filesystem, as do local paths while a chaos/test backend is
+    registered for the ``file`` scheme (so fault injection covers footer
+    reads too). Torn files raise ``ShardCorruptError``."""
     from . import backend as _backend
-    if _backend.is_remote(path):
+    if _backend.is_remote(path) or _backend.has_custom_local_backend():
         with _backend.open_shard(path) as h:
             return _backend.read_shard_footer(h)
     with open(path, "rb") as f:
+        size = f.seek(0, 2)
+        if size < _TAIL.size:
+            raise ShardCorruptError(
+                path, f"file too small ({size} byte(s)) for a Bullion tail")
         f.seek(-_TAIL.size, 2)
         tail = f.read(_TAIL.size)
         flen, magic = _TAIL.unpack(tail)
         if magic != MAGIC:
-            raise ValueError(f"{path}: not a Bullion file")
-        f.seek(-_TAIL.size - flen, 2)
-        foot_off = f.tell()
+            raise ShardCorruptError(
+                path, "bad magic (not a Bullion file, or a torn write)")
+        if flen + _TAIL.size > size:
+            raise ShardCorruptError(
+                path, f"footer length {flen} exceeds file size {size} "
+                      "(truncated write)")
+        foot_off = size - _TAIL.size - flen
+        f.seek(foot_off)
         buf = f.read(flen)
-    return FooterView(buf), foot_off
+    return parse_footer(buf, foot_off, path), foot_off

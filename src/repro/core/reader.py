@@ -28,6 +28,7 @@ import numpy as np
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from . import backend as _backend
+from . import integrity as _integrity
 from .footer import ColKind, Sec, read_footer
 from .quantization import QuantSpec
 
@@ -81,6 +82,14 @@ class IOStats:
     backend_wasted_bytes: int = 0  # hole bytes fetched remotely because run
                                    # coalescing bridged a gap (the remote
                                    # twin of ``wasted_bytes``)
+    pages_verified: int = 0   # page payloads hashed against PAGE_CHECKSUM
+                              # before decode (BULLION_VERIFY policy)
+    checksum_failures: int = 0  # verification mismatches observed (includes
+                                # ones the single re-read recovered)
+    pages_quarantined: int = 0  # pages whose mismatch persisted across the
+                                # re-read and entered the QuarantineRegistry
+    degraded_rows: int = 0    # rows dropped (skip) or zero-masked (mask)
+                              # because their page is quarantined
 
     # -- aggregation (the one field-complete merge every consumer uses) -------
     def merge(self, other: "IOStats") -> "IOStats":
@@ -314,7 +323,9 @@ class BullionReader:
             out.update(self._pread_run(
                 off, end, [(o, s, p) for (o, s), p in extents[i:j]]))
             i = j
-        return out
+        # decode-time integrity gate: checksum every materialized page per
+        # the BULLION_VERIFY policy before anything decodes it
+        return _integrity.verify_pages(self, out)
 
     # -- projection (deprecated shims over the Dataset plan path) ----------------
     def project(self, names: Sequence[str], groups: Optional[Sequence[int]] = None,

@@ -96,6 +96,21 @@ EncodingAdvisor = Callable[[np.ndarray, int, np.dtype],
                            Optional[tuple[str, ...]]]
 
 
+def _fsync_dir(dirpath: str) -> None:
+    """Make a just-completed rename durable. Best-effort: not every
+    filesystem or platform supports fsync on a directory fd."""
+    try:
+        fd = os.open(dirpath or ".", os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform-dependent
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover - platform-dependent
+        pass
+    finally:
+        os.close(fd)
+
+
 def quality_sort(column: str, descending: bool = True) -> SortUDF:
     """The paper's quality-aware presorting (§2.5)."""
 
@@ -262,9 +277,17 @@ class BullionWriter:
                          group=self._n_groups):
             self._write_group_inner(table, n_rows)
 
+    @property
+    def _tmp_path(self) -> str:
+        """Crash-safe staging file: all bytes land in ``path + ".tmp"`` and
+        only a completed, fsynced shard is renamed over ``path``, so a
+        crash at any point leaves either the old file or an ignorable tmp —
+        never a torn shard visible to readers (discovery skips ``.tmp``)."""
+        return self.path + ".tmp"
+
     def _write_group_inner(self, table: dict, n_rows: int) -> None:
         if self._f is None:
-            self._f = open(self.path, "wb")
+            self._f = open(self._tmp_path, "wb")
             # §2.5 column layout reordering (hot columns adjacent)
             layout = [s.name for s in self.schema]
             if self.column_order_udf is not None:
@@ -303,12 +326,16 @@ class BullionWriter:
 
     # -- finalize ----------------------------------------------------------------
     def abort(self) -> None:
-        """Drop an unfinished file: close the handle without writing a
-        footer (the partial file is not a valid Bullion shard). No-op after
-        a successful ``close()``."""
+        """Drop an unfinished file: close the handle and unlink the staging
+        tmp (nothing was ever renamed over ``path``, so readers never saw a
+        partial shard). No-op after a successful ``close()``."""
         if self._result is None and self._f is not None:
             self._f.close()
             self._f = None
+            try:
+                os.unlink(self._tmp_path)
+            except OSError:
+                pass
 
     def close(self) -> dict:
         if self._result is not None:
@@ -339,7 +366,7 @@ class BullionWriter:
             # well-formed group/page structure
             self._flush_group(0)
         if self._f is None:  # pragma: no cover - _flush_group always opens
-            self._f = open(self.path, "wb")
+            self._f = open(self._tmp_path, "wb")
 
         n_rows, n_cols = self._n_rows, len(self.schema)
         n_groups, n_pages = self._n_groups, len(self._page_offset)
@@ -466,8 +493,16 @@ class BullionWriter:
         footer = fb.build()
         f.write(footer)
         f.write(struct.pack("<Q", len(footer)) + MAGIC)
+        # crash-safe publication: fsync the staging file, rename it over the
+        # final path, then fsync the directory so the rename itself is
+        # durable. kill -9 anywhere before the replace leaves only the old
+        # file (or nothing) plus an ignorable ``.tmp``.
+        f.flush()
+        os.fsync(f.fileno())
         f.close()
         self._f = None
+        os.replace(self._tmp_path, self.path)
+        _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
         # a (re)write at this path obsoletes any cached footer even when
         # filesystem timestamps are too coarse to show it
         notify_footer_rewrite(self.path)

@@ -300,6 +300,7 @@ class Dataset:
                 scope.__exit__(None, None, None)
             rec.wall_seconds = time.perf_counter() - t0
             rec.io = dataclasses.asdict(self._source.stats.delta(before))
+            rec.degraded = bool(rec.io.get("degraded_rows"))
             if tracer is not None:
                 rec.stages = _querylog.stage_dict(tracer.aggregate())
                 rec.dropped_spans = tracer.dropped

@@ -21,8 +21,9 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 import numpy as np
 
+from ..core import integrity as _integrity
 from ..core import pages as pages_mod
-from ..core.footer import ColKind, PageType, Sec
+from ..core.footer import ColKind, PageType, Sec, ShardCorruptError
 from ..core.quantization import QuantMode, dequantize
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
@@ -103,10 +104,26 @@ def _decode_page_timed(flag: int, blob: bytes):
     return decoded
 
 
+def _mask_fill(fv, col: int, rows: int):
+    """Shape-stable zero fill for a quarantined page under the ``mask``
+    corruption policy: scalar/media_ref pages decode to zeros of the
+    storage dtype, list pages to empty arrays, string pages to empty
+    strings — same row count and types as a healthy decode."""
+    from ..core.encodings.base import code_dtype
+    kind = int(fv.arr(Sec.COL_KIND, np.uint8)[col])
+    dt = code_dtype(int(fv.arr(Sec.COL_DTYPE, np.uint8)[col]))
+    if kind == int(ColKind.LIST):
+        return [np.zeros(0, dt)] * rows
+    if kind == int(ColKind.STRING):
+        return [b""] * rows
+    return np.zeros(rows, dt)
+
+
 def decode_group(reader: "BullionReader", names: Sequence[str], group: int, *,
                  drop_deleted: bool = True, dequant: bool = True,
                  pages: Optional[Sequence[int]] = None,
-                 align_raw: bool = False) -> dict:
+                 align_raw: bool = False,
+                 masked_out: Optional[set] = None) -> dict:
     """Decode one row group's columns via coalesced preads.
 
     ``pages`` restricts the read to a plan's surviving page ordinals (the
@@ -136,16 +153,27 @@ def decode_group(reader: "BullionReader", names: Sequence[str], group: int, *,
             sp.set(bytes=sum(len(b) for b in raw.values()))
     traced = _trace.enabled()
     out: dict = {}
+
+    def _dec(c: int, p: int):
+        blob = raw.get(p)
+        if blob is None:
+            # the verification gate removed a quarantined page (corruption
+            # policy ``mask``): serve shape-stable zeros instead of failing
+            # the whole group. Anything else missing is a real bug.
+            if not _integrity.QUARANTINE.contains(reader.path, fv, p):
+                raise KeyError(p)
+            if masked_out is not None:
+                masked_out.add(p)
+            return _mask_fill(fv, c, int(page_rows[p]))
+        if traced:
+            return _decode_page_timed(int(flags[p]) & 0x7F, blob)
+        return pages_mod.decode_page(int(flags[p]) & 0x7F, blob)
+
     for name, c in zip(names, cols):
         pids = _chunk_page_ids(fv, group, c, pages)
         with _trace.span("decode.decode", cat="decode",
                          column=name, pages=len(pids)):
-            if traced:
-                parts = [_decode_page_timed(int(flags[p]) & 0x7F, raw[p])
-                         for p in pids]
-            else:
-                parts = [pages_mod.decode_page(int(flags[p]) & 0x7F, raw[p])
-                         for p in pids]
+            parts = [_dec(c, p) for p in pids]
         if drop_deleted or align_raw:
             with _trace.span("decode.mask", cat="decode", column=name):
                 for i, p in enumerate(pids):
@@ -262,6 +290,17 @@ def eval_mask(pred: Predicate, tbl: dict,
 # ---------------------------------------------------------------------------
 
 
+def _page_ordinal(fv, group: int, page: int) -> int:
+    """Page ordinal (position within its chunk) of a physical page. Every
+    column of a group splits at the same row boundaries, so one ordinal
+    names the same row range in every chunk."""
+    for c in range(fv.n_cols):
+        s, e = fv.chunk_pages(group, c)
+        if s <= page < e:
+            return page - s
+    raise ValueError(f"page {page} not in group {group}")
+
+
 def execute_group(reader: "BullionReader", group: int, *,
                   columns: Sequence[str] = (),
                   predicate: Optional[Predicate] = None,
@@ -270,6 +309,86 @@ def execute_group(reader: "BullionReader", group: int, *,
                   use_kernel: Optional[bool] = None,
                   pages: Optional[Sequence[int]] = None
                   ) -> Optional[GroupResult]:
+    """Decode + filter one row group with graceful degradation.
+
+    The inner pipeline (``_execute_group_once``) raises
+    ``ShardCorruptError`` when decode-time verification quarantines a page.
+    Under the ``skip`` corruption policy that page's *ordinal* is excluded
+    (dropping the same row range from every column — the result stays
+    rectangular) and the group retries; dropped rows are charged exactly
+    once to ``IOStats.degraded_rows``. Under ``mask`` the verification gate
+    already zero-filled the page; the masked rows are charged here. Under
+    ``raise`` (the default) the error propagates with (shard, group, page).
+    """
+    fv = reader.footer
+    policy = _integrity.corruption_policy()
+    masked_out: Optional[set] = set() \
+        if policy == _integrity.ON_CORRUPT_MASK else None
+    if policy != _integrity.ON_CORRUPT_SKIP:
+        res = _execute_group_once(
+            reader, group, columns=columns, predicate=predicate, rows=rows,
+            drop_deleted=drop_deleted, dequant=dequant, use_kernel=use_kernel,
+            pages=pages, masked_out=masked_out)
+        if masked_out:
+            page_rows = fv.arr(Sec.PAGE_ROWS, np.uint32)
+            _charge_degraded(
+                reader, sum(int(page_rows[p]) for p in masked_out))
+        return res
+
+    # skip mode: pre-exclude ordinals already quarantined for this exact
+    # footer object, then retry as verification quarantines new ones
+    n_ord = len(fv.chunk_page_rows(group, 0))
+    excluded: set[int] = set()
+    for p, (g, _reason) in _integrity.QUARANTINE.lookup(
+            reader.path, fv).items():
+        if g == group:
+            excluded.add(_page_ordinal(fv, group, p))
+    selected = set(range(n_ord)) if pages is None \
+        else {int(k) for k in pages}
+    for _ in range(n_ord + 1):
+        if excluded:
+            eff = sorted(selected - excluded)
+        else:
+            eff = pages
+        try:
+            res = _execute_group_once(
+                reader, group, columns=columns, predicate=predicate,
+                rows=rows, drop_deleted=drop_deleted, dequant=dequant,
+                use_kernel=use_kernel, pages=eff)
+        except ShardCorruptError as e:
+            if e.page is None or e.path != reader.path:
+                raise
+            k = _page_ordinal(fv, group, e.page)
+            if k in excluded:       # no progress: don't loop forever
+                raise
+            excluded.add(k)
+            continue
+        dropped = excluded & selected
+        if dropped:
+            rows_per = fv.chunk_page_rows(group, 0)
+            _charge_degraded(
+                reader, sum(int(rows_per[k]) for k in dropped))
+        return res
+    raise AssertionError("unreachable: every ordinal excluded")  # pragma: no cover
+
+
+def _charge_degraded(reader: "BullionReader", n_rows: int) -> None:
+    if not n_rows:
+        return
+    with reader._stats_lock:
+        reader.stats.degraded_rows += n_rows
+    _metrics.counter("bullion.integrity.degraded_rows").inc(n_rows)
+
+
+def _execute_group_once(reader: "BullionReader", group: int, *,
+                        columns: Sequence[str] = (),
+                        predicate: Optional[Predicate] = None,
+                        rows: Optional[np.ndarray] = None,
+                        drop_deleted: bool = True, dequant: bool = True,
+                        use_kernel: Optional[bool] = None,
+                        pages: Optional[Sequence[int]] = None,
+                        masked_out: Optional[set] = None
+                        ) -> Optional[GroupResult]:
     """Decode + filter one row group. Returns None when a predicate or a
     row-id selection leaves no rows (payload pages are then never read).
 
@@ -305,7 +424,8 @@ def execute_group(reader: "BullionReader", group: int, *,
         # page to its raw row space so mask indices line up with space_raw
         tbl = decode_group(reader, pred_cols, group,
                            drop_deleted=drop_deleted, dequant=True,
-                           pages=pages, align_raw=not drop_deleted)
+                           pages=pages, align_raw=not drop_deleted,
+                           masked_out=masked_out)
         sp = _trace.span("exec.filter", cat="exec", group=group)
         with sp:
             mask = eval_mask(predicate, tbl, use_kernel)
@@ -340,7 +460,8 @@ def execute_group(reader: "BullionReader", group: int, *,
         # read 0) to keep row_ids and all columns the same length.
         ptbl = decode_group(reader, rest, group,
                             drop_deleted=drop_deleted, dequant=dequant,
-                            pages=pages, align_raw=not drop_deleted)
+                            pages=pages, align_raw=not drop_deleted,
+                            masked_out=masked_out)
         for name in rest:
             out[name] = ptbl[name] if full else _take(ptbl[name], local)
     return GroupResult(row_ids=raw_local, table=out)

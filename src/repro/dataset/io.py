@@ -46,6 +46,7 @@ import threading
 from typing import TYPE_CHECKING, Optional, Sequence
 
 from ..core import backend as _backend
+from ..core import integrity as _integrity
 from ..core.reader import BullionReader
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
@@ -90,6 +91,11 @@ class PrefetchReader:
                 missing.append(p)
             else:
                 out[p] = data
+        # staged bytes get the same decode-time verification gate the serial
+        # path applies; a mismatching staged page re-reads *directly* through
+        # the base reader (bypassing the prefetch buffer) before declaring
+        # corruption. The fallback reads below verify inside the base call.
+        out = _integrity.verify_pages(self, out)
         if missing:
             # fallback reads run through the base reader's coalesced pread
             # path, so preads / coalesced_preads / wasted_bytes are charged

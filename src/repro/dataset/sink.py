@@ -252,9 +252,10 @@ def write_dataset(ds: "Dataset", out_dir: str, *,
         if writer is not None:
             writer.abort()
         for p in result.paths:
-            try:
-                os.unlink(p)
-            except OSError:
-                pass
+            for victim in (p, p + ".tmp"):
+                try:
+                    os.unlink(victim)
+                except OSError:
+                    pass
         raise
     return result

@@ -30,7 +30,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from ..core import backend as _backend
-from ..core.footer import (MAGIC, FooterView, Sec,
+from ..core.footer import (MAGIC, FooterView, Sec, ShardCorruptError,
                            register_footer_invalidator, read_footer)
 from ..core.reader import BullionReader, IOStats, default_coalesce_gap
 from ..obs import metrics as _metrics
@@ -87,7 +87,14 @@ def cached_footer(path: str) -> tuple[FooterView, int, bool]:
         if ent is not None and ent[0] == val:
             _footer_cache.move_to_end(key)
             return ent[1], ent[2], True
-    fv, off = read_footer(path)
+    try:
+        fv, off = read_footer(path)
+    except ShardCorruptError:
+        # a shard that fails footer/tail validation must not linger in the
+        # cache under a stale validator: the repaired/replaced file re-reads
+        # fresh on the next open, no process restart needed
+        invalidate_cached_footer(path)
+        raise
     # only cache if the file didn't change underneath the read (a torn
     # racing rewrite must not be pinned under the pre-rewrite validator)
     if _footer_validator(path) == val:
@@ -107,7 +114,11 @@ def _cached_footer_remote(uri: str) -> tuple[FooterView, int, bool]:
             if ent is not None and ent[0] == val:
                 _footer_cache.move_to_end(uri)
                 return ent[1], ent[2], True
-        fv, off = _backend.read_shard_footer(h)
+        try:
+            fv, off = _backend.read_shard_footer(h)
+        except ShardCorruptError:
+            invalidate_cached_footer(uri)
+            raise
         # same torn-rewrite guard as the local path: only cache if the
         # object identity didn't change underneath the read
         if h.validator() == val:
@@ -137,6 +148,11 @@ register_footer_invalidator(invalidate_cached_footer)
 
 
 def _is_bullion(path: str) -> bool:
+    if path.endswith(".tmp"):
+        # an atomic-write staging file: even a *completed* tmp (crash
+        # between the final fsync and the rename) must stay invisible to
+        # discovery and the sink's clash check
+        return False
     try:
         with open(path, "rb") as f:
             f.seek(-8, 2)

@@ -87,6 +87,8 @@ class QueryRecord:
     wall_seconds: float = 0.0
     outcome: str = "ok"                     # "ok" | "error"
     error: Optional[str] = None
+    degraded: bool = False                  # quarantined pages dropped/masked
+                                            # rows (io["degraded_rows"] > 0)
     io: Optional[dict] = None               # exact IOStats delta (asdict)
     stages: Optional[dict] = None           # scoped-tracer aggregate
     trace_id: Optional[str] = None          # wire-propagated trace id
@@ -130,6 +132,7 @@ class QueryLog:
         self.total = 0               # records ever appended (ring evicts)
         self.errors = 0
         self.slow = 0
+        self.degraded = 0            # records that dropped/masked rows
 
     def append(self, rec: QueryRecord) -> QueryRecord:
         if self.slow_seconds is not None \
@@ -142,6 +145,8 @@ class QueryLog:
                 self.errors += 1
             if rec.slow:
                 self.slow += 1
+            if rec.degraded:
+                self.degraded += 1
             self._sink_write(rec)
         return rec
 
@@ -178,18 +183,22 @@ class QueryLog:
         with self._lock:
             recs = list(self._recs)
             total, errors, slow = self.total, self.errors, self.slow
+            degraded = self.degraded
         by_ds: dict[str, dict] = {}
         for r in recs:
             d = by_ds.setdefault(r.dataset, {"queries": 0, "errors": 0,
-                                             "rows": 0, "wall_seconds": 0.0})
+                                             "degraded": 0, "rows": 0,
+                                             "wall_seconds": 0.0})
             d["queries"] += 1
             d["rows"] += r.rows
             d["wall_seconds"] += r.wall_seconds
             if r.outcome != "ok":
                 d["errors"] += 1
+            if r.degraded:
+                d["degraded"] += 1
         return {"total": total, "errors": errors, "slow": slow,
-                "retained": len(recs), "capacity": self.capacity,
-                "by_dataset": by_ds}
+                "degraded": degraded, "retained": len(recs),
+                "capacity": self.capacity, "by_dataset": by_ds}
 
     def close(self) -> None:
         with self._lock:

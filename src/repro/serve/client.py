@@ -53,6 +53,8 @@ class ClientResult:
     fingerprint: str
     wall_seconds: float
     trace_id: Optional[str] = None
+    degraded: bool = False        # server dropped/masked quarantined pages
+    degraded_rows: int = 0
 
 
 class ServeClient:
@@ -147,7 +149,9 @@ class ServeClient:
                             cache_hit=resp["cache_hit"],
                             fingerprint=resp["fingerprint"],
                             wall_seconds=resp["wall_seconds"],
-                            trace_id=self.trace_id)
+                            trace_id=self.trace_id,
+                            degraded=bool(resp.get("degraded")),
+                            degraded_rows=int(resp.get("degraded_rows") or 0))
 
     def profile(self, path: Optional[str] = None) -> Profile:
         """Merge the client-side RPC spans with every server span this

@@ -43,6 +43,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+from ..core import integrity as _integrity
 from ..dataset import executor
 from ..dataset.core import Dataset
 from ..dataset.plan import LogicalPlan
@@ -73,6 +74,8 @@ class QueryResult:
     tenant: str = DEFAULT_TENANT
     trace_id: Optional[str] = None
     spans: Optional[list] = None  # wall-ts span dicts (wire trace requests)
+    degraded: bool = False        # quarantined pages degraded this result
+    degraded_rows: int = 0        # exact rows dropped/masked (IOStats delta)
 
 
 @dataclass
@@ -364,6 +367,7 @@ class DatasetServer:
                 # exact for this query while queries on the dataset don't
                 # overlap (the source accounting is dataset-wide)
                 rec.io = dataclasses.asdict(source.stats.delta(before))
+                rec.degraded = bool(rec.io.get("degraded_rows"))
             finally:
                 if scope is not None:
                     scope.__exit__(None, None, None)
@@ -389,7 +393,10 @@ class DatasetServer:
             return QueryResult(table=table, rows=rec.rows, cache_hit=hit,
                                fingerprint=fp, wall_seconds=wall,
                                tenant=tenant, trace_id=trace_id,
-                               spans=spans_out if collect_spans else None)
+                               spans=spans_out if collect_spans else None,
+                               degraded=rec.degraded,
+                               degraded_rows=int(
+                                   (rec.io or {}).get("degraded_rows") or 0))
         except Exception as e:
             rec.outcome = "error"
             rec.error = f"{type(e).__name__}: {e}"
@@ -430,6 +437,14 @@ class DatasetServer:
                       "spans": len(tr.spans) if tr is not None else 0,
                       "dropped": tr.dropped if tr is not None else 0},
             "query_log": self.query_log.summary(),
+            # decode-time verification posture + every quarantined page
+            # (path -> [(group, page, reason)]), so operators see exactly
+            # which shards need repair and degraded queries are explicable
+            "integrity": {
+                "verify_policy": _integrity.verify_policy(),
+                "on_corrupt": _integrity.corruption_policy(),
+                **_integrity.QUARANTINE.summary(),
+            },
         }
 
     def metrics_text(self) -> str:
@@ -539,6 +554,8 @@ class DatasetServer:
                     "cache_hit": res.cache_hit,
                     "fingerprint": res.fingerprint,
                     "wall_seconds": res.wall_seconds,
+                    "degraded": res.degraded,
+                    "degraded_rows": res.degraded_rows,
                     "table": wire.encode_table(res.table)}
             if trace_req:
                 resp["trace"] = {"id": trace_id,

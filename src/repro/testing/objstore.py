@@ -8,7 +8,9 @@ root directory as ``/bucket/key`` objects with HTTP/1.1 keep-alive, byte
 Fault injection (``inject``) queues per-request schedules applied to the
 next data range GETs: an error status, a truncated body (the server
 advertises the full ``Content-Length`` then drops the connection
-mid-body), or an override latency. A uniform per-request ``latency`` models
+mid-body), a silently corrupted body (one byte flipped, length and
+headers truthful — only checksum verification catches it), or an
+override latency. A uniform per-request ``latency`` models
 object-store RTT; ``max_in_flight`` records the high-water mark of
 concurrently served requests so tests can assert the async batcher really
 overlapped its ranges.
@@ -95,14 +97,16 @@ class FakeObjectStore:
     # -- fault schedule ------------------------------------------------------
     def inject(self, *, count: int = 1, status: Optional[int] = None,
                truncate: Optional[float] = None,
+               corrupt: bool = False,
                latency: Optional[float] = None) -> None:
         """Apply a fault to each of the next ``count`` data range GETs:
         respond ``status`` (e.g. 503), send only ``truncate`` fraction of
-        the advertised body then drop the connection, and/or override the
-        per-request ``latency``."""
+        the advertised body then drop the connection, flip one body byte
+        (``corrupt=True`` — length and headers stay truthful, so only a
+        checksum can tell), and/or override the per-request ``latency``."""
         for _ in range(count):
             self._faults.append({"status": status, "truncate": truncate,
-                                 "latency": latency})
+                                 "corrupt": corrupt, "latency": latency})
 
     def clear_faults(self) -> None:
         self._faults.clear()
@@ -187,6 +191,13 @@ class FakeObjectStore:
         with open(path, "rb") as f:
             f.seek(start)
             body = f.read(end - start)
+        if fault and fault.get("corrupt") and body:
+            # silent in-flight corruption: flip the middle byte, keep the
+            # advertised Content-Length — only checksum verification can
+            # catch this one
+            flipped = bytearray(body)
+            flipped[len(flipped) // 2] ^= 0xFF
+            body = bytes(flipped)
 
         h.send_response(status)
         h.send_header("Content-Length", str(len(body)))

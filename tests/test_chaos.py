@@ -1,0 +1,453 @@
+"""Self-healing read path under injected faults: decode-time checksum
+verification (off/sample/full), quarantine + skip/mask degradation with
+exact row accounting, transient-fault recovery via one re-read, torn-write
+rejection across format versions, crash-safe atomic writes (kill -9 leaves
+no torn shard visible), and the ``fsck --json`` report."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import cli
+from repro.core import BullionWriter, ColumnSpec
+from repro.core import integrity as _integrity
+from repro.core.footer import Sec, ShardCorruptError, read_footer
+from repro.core.integrity import QUARANTINE
+from repro.dataset import clear_footer_cache, dataset, discover
+from repro.obs import metrics as _metrics
+from repro.obs import querylog as _querylog
+from repro.testing import FakeObjectStore, chaos
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    """Integrity state is process-wide; every test starts and ends clean."""
+    _integrity.set_verify_policy(None)
+    _integrity.set_corruption_policy(None)
+    QUARANTINE.clear()
+    clear_footer_cache()
+    yield
+    _integrity.set_verify_policy(None)
+    _integrity.set_corruption_policy(None)
+    QUARANTINE.clear()
+    clear_footer_cache()
+    _querylog.enable_local(False)
+
+
+def _write(path, *, n=600, rows_per_group=128, page_rows=64,
+           collect_stats=True, collect_sketches=None):
+    schema = [ColumnSpec("id", "int64"), ColumnSpec("tag", "string"),
+              ColumnSpec("q", "float32")]
+    ids = np.arange(n, dtype=np.int64)
+    w = BullionWriter(str(path), schema, rows_per_group=rows_per_group,
+                      page_rows=page_rows, collect_stats=collect_stats,
+                      collect_sketches=collect_sketches)
+    w.write_table({"id": ids, "tag": [b"t%d" % v for v in ids],
+                   "q": (ids % 50).astype(np.float32)})
+    w.close()
+    return str(path)
+
+
+def _flip_page(path, page):
+    """Flip one byte inside a physical page's on-disk extent."""
+    fv, _ = read_footer(path)
+    off, size = fv.page_extent(page)
+    assert size > 0
+    with open(path, "r+b") as f:
+        f.seek(off + size // 2)
+        b = f.read(1)
+        f.seek(off + size // 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+    clear_footer_cache()     # the flip changes mtime anyway; be explicit
+
+
+def _counter(name):
+    return _metrics.counter(name).value
+
+
+# ---------------------------------------------------------------------------
+# decode-time verification: policies + the raise path
+# ---------------------------------------------------------------------------
+
+def test_full_raise_names_shard_group_page(tmp_path):
+    """Acceptance: one flipped byte under full+raise raises
+    ShardCorruptError naming (shard, group, page)."""
+    p = _write(tmp_path / "a.bln")
+    _flip_page(p, 0)         # group 0, column "id", ordinal 0
+    _integrity.set_verify_policy("full")
+    with pytest.raises(ShardCorruptError) as ei:
+        with dataset(p) as ds:
+            ds.to_table()
+    err = ei.value
+    assert err.path == p and err.group == 0 and err.page == 0
+    assert "group 0" in str(err) and "page 0" in str(err)
+    assert p in str(err)
+    # the persistent mismatch is quarantined for this footer object
+    assert QUARANTINE.summary()["quarantined_pages"] == 1
+
+
+def test_verify_off_skips_hashing(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("off")
+    with dataset(p) as ds:
+        ds.to_table()
+        assert ds.stats.pages_verified == 0
+
+
+def test_sample_verifies_once_per_footer_cache_entry(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("sample")
+    with dataset(p) as ds:
+        ds.to_table()
+        first = ds.stats.pages_verified
+    assert first > 0
+    # a second open shares the cached FooterView -> memo already warm
+    with dataset(p) as ds:
+        ds.to_table()
+        assert ds.stats.pages_verified == 0
+    # full mode re-verifies every read
+    _integrity.set_verify_policy("full")
+    with dataset(p) as ds:
+        ds.to_table()
+        ds.to_table()
+        assert ds.stats.pages_verified == 2 * first
+
+
+# ---------------------------------------------------------------------------
+# degradation: skip (drop rows, exact accounting) and mask (zero fill)
+# ---------------------------------------------------------------------------
+
+def test_skip_drops_page_rows_with_exact_accounting(tmp_path):
+    """Acceptance: skip returns the remaining rows; degraded_rows equals
+    exactly the quarantined page's row count; the query record is marked
+    degraded; a repaired shard serves clean without a process restart."""
+    p = _write(tmp_path / "a.bln")
+    fv, _ = read_footer(p)
+    page_rows = int(fv.arr(Sec.PAGE_ROWS, np.uint32)[0])
+    _flip_page(p, 0)         # rows [0, page_rows) of group 0
+    _integrity.set_verify_policy("full")
+    _integrity.set_corruption_policy("skip")
+    _querylog.enable_local(True)
+    with dataset(p) as ds:
+        table = ds.to_table()
+        st = ds.stats
+    assert st.degraded_rows == page_rows == 64
+    assert st.pages_quarantined == 1
+    np.testing.assert_array_equal(table["id"],
+                                  np.arange(page_rows, 600, dtype=np.int64))
+    # every column dropped the same row range: result stayed rectangular
+    assert len(table["tag"]) == len(table["q"]) == 600 - page_rows
+    rec = _querylog.LOG.records()[-1]
+    assert rec.degraded and rec.io["degraded_rows"] == page_rows
+    # out-of-band repair: rewrite in place; quarantine self-invalidates
+    # because the fresh file parses to a new footer object
+    _write(tmp_path / "a.bln")
+    with dataset(p) as ds:
+        table = ds.to_table()
+        assert len(table["id"]) == 600
+        assert ds.stats.degraded_rows == 0
+
+
+def test_mask_zero_fills_and_keeps_shape(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    fv, _ = read_footer(p)
+    c = fv.column_index("q")
+    s, _e = fv.chunk_pages(0, c)
+    _flip_page(p, s)         # first page of q's group-0 chunk: rows 0..63
+    _integrity.set_verify_policy("full")
+    _integrity.set_corruption_policy("mask")
+    with dataset(p) as ds:
+        table = ds.to_table()
+        st = ds.stats
+    assert len(table["id"]) == 600
+    assert st.degraded_rows == 64
+    assert (np.asarray(table["q"][:64]) == 0.0).all()
+    np.testing.assert_array_equal(
+        np.asarray(table["q"][64:]),
+        (np.arange(64, 600) % 50).astype(np.float32))
+    np.testing.assert_array_equal(table["id"], np.arange(600))
+
+
+# ---------------------------------------------------------------------------
+# chaos harness: transient faults recover via the one re-read
+# ---------------------------------------------------------------------------
+
+def test_transient_bitflip_recovers_without_quarantine(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    expect = np.arange(600, dtype=np.int64)
+    _integrity.set_verify_policy("full")
+    before = _counter("bullion.integrity.reread_recovered")
+    with chaos() as ctl:
+        f = ctl.inject("bitflip", ordinal=0, byte=5)
+        with dataset(p) as ds:
+            table = ds.to_table()
+            st = ds.stats
+    assert f.fired == 1
+    np.testing.assert_array_equal(table["id"], expect)
+    assert st.checksum_failures >= 1
+    assert st.pages_quarantined == 0
+    assert _counter("bullion.integrity.reread_recovered") > before
+    assert QUARANTINE.summary()["quarantined_pages"] == 0
+
+
+def test_persistent_bitflip_quarantines(tmp_path):
+    """The same fault on the read *and* the re-read is real corruption."""
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("full")
+    with chaos() as ctl:
+        ctl.inject("bitflip", ordinal=0, times=-1, byte=5)
+        with pytest.raises(ShardCorruptError):
+            with dataset(p) as ds:
+                ds.to_table()
+    assert QUARANTINE.summary()["quarantined_pages"] >= 1
+
+
+def test_eio_fallback_under_prefetch(tmp_path):
+    """An EIO inside the prefetch scheduler's coalesced read falls back to
+    the direct path; the query still answers correctly."""
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("full")
+    with chaos() as ctl:
+        f = ctl.inject("eio", ordinal=0)
+        with dataset(p) as ds:
+            table = ds.to_table(io_depth=4)
+    assert f.fired == 1
+    np.testing.assert_array_equal(table["id"], np.arange(600))
+
+
+def test_stale_footer_race_is_detected(tmp_path):
+    """A reader holding a stale footer across a shard rewrite must surface
+    corruption, not silently decode the wrong bytes."""
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("full")
+    with chaos() as ctl:
+        ctl.inject("stale_footer", section="footer", ordinal=0, times=-1)
+        with dataset(p) as ds:          # records the pre-rewrite tail
+            ds.to_table()
+        # out-of-band rewrite with different content, same path
+        _write(tmp_path / "a.bln", n=600, rows_per_group=64, page_rows=32)
+        clear_footer_cache()
+        with pytest.raises(ShardCorruptError):
+            with dataset(p) as ds:      # served the stale tail
+                ds.to_table()
+
+
+def test_truncated_pread_recovers(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    _integrity.set_verify_policy("full")
+    with chaos() as ctl:
+        f = ctl.inject("truncate", ordinal=0, keep=0.5)
+        with dataset(p) as ds:
+            table = ds.to_table()
+            st = ds.stats
+    assert f.fired == 1
+    np.testing.assert_array_equal(table["id"], np.arange(600))
+    assert st.pages_quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# remote: corrupt response bodies against the fake object store
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def store(tmp_path):
+    from repro.core import backend as _backend
+    os.makedirs(tmp_path / "bucket", exist_ok=True)
+    local = _write(tmp_path / "bucket" / "part-00000.bln")
+    with FakeObjectStore(str(tmp_path)) as s:
+        _backend.configure_object_store(s.endpoint)
+        s.local_path = local
+        s.shard_uri = "bullion://bucket/part-00000.bln"
+        try:
+            yield s
+        finally:
+            _backend.configure_object_store(None)
+            clear_footer_cache()
+
+
+def test_remote_corrupt_body_recovers_with_one_refetch(store):
+    with dataset(store.shard_uri) as ds:
+        ds.to_table()                    # warm the footer cache cleanly
+    store.inject(corrupt=True)           # next data GET flips one byte
+    with dataset(store.shard_uri) as ds:
+        table = ds.to_table()
+        st = ds.stats
+    np.testing.assert_array_equal(table["id"], np.arange(600))
+    assert st.checksum_failures >= 1
+    assert st.pages_quarantined == 0
+
+
+def test_remote_persistent_corruption_quarantines(store):
+    with dataset(store.shard_uri) as ds:
+        ds.to_table()
+    store.inject(corrupt=True, count=8)  # original fetch AND the re-read
+    with pytest.raises(ShardCorruptError):
+        with dataset(store.shard_uri) as ds:
+            ds.to_table()
+    assert QUARANTINE.summary()["quarantined_pages"] >= 1
+    store.clear_faults()
+
+
+# ---------------------------------------------------------------------------
+# torn writes: open rejects, fsck exits 2 — across format versions
+# ---------------------------------------------------------------------------
+
+_VERSIONS = {
+    "v0": dict(collect_stats=False),
+    "v2": dict(collect_sketches=False),
+    "v3": dict(),
+}
+
+_TEARS = {
+    "truncated_footer": lambda raw: raw[:-24],
+    "zeroed_magic": lambda raw: raw[:-8] + b"\0" * 8,
+    "footer_len_past_eof": lambda raw: raw[:-16]
+    + (len(raw) + 1024).to_bytes(8, "little") + raw[-8:],
+    "mid_data_truncation": lambda raw: raw[:len(raw) // 3],
+}
+
+
+@pytest.mark.parametrize("version", sorted(_VERSIONS))
+@pytest.mark.parametrize("tear", sorted(_TEARS))
+def test_torn_file_rejected_on_open(tmp_path, version, tear):
+    p = _write(tmp_path / "a.bln", **_VERSIONS[version])
+    raw = open(p, "rb").read()
+    open(p, "wb").write(_TEARS[tear](raw))
+    clear_footer_cache()
+    with pytest.raises(ShardCorruptError):
+        read_footer(p)
+    assert cli.main(["fsck", p]) == 2
+
+
+def test_bad_page_extents_rejected_on_open(tmp_path):
+    """A footer whose page extents run past the data region is refused at
+    parse time (same guard fsck used to discover lazily)."""
+    p = _write(tmp_path / "a.bln")
+    fv, foot_off = read_footer(p)
+    clear_footer_cache()
+    raw = open(p, "rb").read()
+    off, size = fv._dir[int(Sec.PAGE_SIZE)]
+    sizes = np.frombuffer(fv.raw(Sec.PAGE_SIZE), np.uint64).copy()
+    sizes[-1] += 10_000_000
+    patched = bytearray(raw)
+    patched[foot_off + off:foot_off + off + size] = sizes.tobytes()
+    open(p, "wb").write(bytes(patched))
+    with pytest.raises(ShardCorruptError):
+        read_footer(p)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe writes
+# ---------------------------------------------------------------------------
+
+def test_writer_leaves_no_tmp_on_success(tmp_path):
+    p = _write(tmp_path / "a.bln")
+    assert os.path.exists(p)
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_kill9_mid_write_leaves_no_torn_shard(tmp_path):
+    """Acceptance: a process killed -9 between shard writes leaves either
+    a complete shard or nothing ``dataset()`` can see."""
+    out = tmp_path / "out"
+    os.makedirs(out)
+    child = (
+        "import os, signal, sys\n"
+        "import numpy as np\n"
+        "from repro.core.writer import BullionWriter, ColumnSpec\n"
+        "out = sys.argv[1]\n"
+        "schema = [ColumnSpec('id', 'int64')]\n"
+        "w = BullionWriter(os.path.join(out, 'part-00000.bln'), schema,\n"
+        "                  rows_per_group=100)\n"
+        "w.write_table({'id': np.arange(500, dtype=np.int64)})\n"
+        "w.close()\n"
+        "w2 = BullionWriter(os.path.join(out, 'part-00001.bln'), schema,\n"
+        "                   rows_per_group=100)\n"
+        "w2.write_table({'id': np.arange(500, dtype=np.int64)})\n"
+        "os.kill(os.getpid(), signal.SIGKILL)\n"   # no close(): torn
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    res = subprocess.run([sys.executable, "-c", child, str(out)], env=env,
+                         capture_output=True, timeout=60)
+    assert res.returncode == -signal.SIGKILL, res.stderr.decode()
+    # only the completed shard is a dataset member; the torn write is at
+    # most a .tmp file the discovery layer refuses to see
+    assert discover(str(out)) == [str(out / "part-00000.bln")]
+    with dataset(str(out)) as ds:
+        assert ds.count_rows() == 500
+    leftovers = sorted(os.listdir(out))
+    assert "part-00001.bln" not in leftovers
+    assert cli.main(["fsck", str(out)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# fsck --json
+# ---------------------------------------------------------------------------
+
+def test_fsck_json_reports_categories(tmp_path, capsys):
+    p = _write(tmp_path / "a.bln")
+    _flip_page(p, 0)
+    assert cli.main(["fsck", "--json", p]) == 1
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["exit"] == 1 and rep["errors"] >= 1 and rep["unusable"] == 0
+    (shard,) = rep["shards"]
+    assert shard["path"] == p and shard["unusable"] is None
+    cats = shard["categories"]
+    assert cats["checksums"]["failed"] == 1
+    assert "checksum mismatch" in cats["checksums"]["first_failure"]
+    assert cats["checksums"]["checks"] > cats["checksums"]["failed"]
+    # unaffected categories ran clean
+    assert cats["extents"]["failed"] == 0
+
+
+def test_fsck_json_torn_file_is_unusable(tmp_path, capsys):
+    p = _write(tmp_path / "a.bln")
+    raw = open(p, "rb").read()
+    open(p, "wb").write(raw[:-8] + b"\0" * 8)
+    clear_footer_cache()
+    assert cli.main(["fsck", "--json", p]) == 2
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["exit"] == 2 and rep["unusable"] == 1
+    (shard,) = rep["shards"]
+    assert "magic" in shard["unusable"]
+    assert shard["categories"]["open"]["failed"] == 1
+
+
+def test_fsck_json_clean(tmp_path, capsys):
+    p = _write(tmp_path / "a.bln")
+    assert cli.main(["fsck", "--json", p]) == 0
+    rep = json.loads(capsys.readouterr().out)
+    assert rep["exit"] == 0 and rep["errors"] == 0
+    assert rep["shards"][0]["failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# serving: degradation is visible on the wire and in stats()
+# ---------------------------------------------------------------------------
+
+def test_server_reports_degradation(tmp_path):
+    from repro.serve import DatasetServer
+    from repro.serve.client import ServeClient
+    p = _write(tmp_path / "a.bln")
+    _flip_page(p, 0)
+    _integrity.set_verify_policy("full")
+    _integrity.set_corruption_policy("skip")
+    with DatasetServer({"t": p}) as srv:
+        sock = srv.serve()
+        with ServeClient(sock) as c:
+            res = c.query("t", columns=["id"])
+            assert res.degraded and res.degraded_rows == 64
+            assert res.rows == 600 - 64
+            st = c.stats()
+    assert st["integrity"]["verify_policy"] == "full"
+    assert st["integrity"]["on_corrupt"] == "skip"
+    assert st["integrity"]["quarantined_pages"] == 1
+    assert st["query_log"]["degraded"] >= 1

@@ -114,10 +114,13 @@ def test_fsck_detects_flipped_page_byte(shard, capsys):
 
 
 def test_fsck_detects_truncated_data_region(tmp_path, capsys):
-    """A page extent pointing past the data region is structural
-    corruption, not a checksum problem."""
+    """A page extent pointing past the data region makes the shard
+    unusable: ``read_footer`` refuses it outright (torn-write guard), so
+    fsck reports exit 2, not a per-page corruption finding."""
     p = _write(tmp_path / "t.bln")
     fv, foot_off = read_footer(p)
+    from repro.dataset.source import invalidate_cached_footer
+    invalidate_cached_footer(p)
     # grow the recorded size of the last page beyond the data region
     raw = open(p, "rb").read()
     off, size = fv._dir[int(Sec.PAGE_SIZE)]
@@ -126,11 +129,11 @@ def test_fsck_detects_truncated_data_region(tmp_path, capsys):
     patched = bytearray(raw)
     patched[foot_off + off:foot_off + off + size] = sizes.tobytes()
     open(p, "wb").write(bytes(patched))
-    assert cli.main(["fsck", p]) == 1
-    assert "outside the data region" in capsys.readouterr().out.replace(
-        "outside\n", "outside the ") or True   # message wording may wrap
-    # exit code is the contract; re-check it was corruption, not usage
-    assert cli.main(["fsck", p]) == 1
+    assert cli.main(["fsck", p]) == 2
+    out = capsys.readouterr().out
+    assert "UNUSABLE" in out
+    # exit code is the contract; re-check it was unusable, not usage
+    assert cli.main(["fsck", p]) == 2
 
 
 def test_fsck_missing_path_is_usage_error(tmp_path):
